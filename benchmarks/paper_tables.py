@@ -1,0 +1,182 @@
+"""Benchmarks reproducing the paper's tables/figures from the ExaNet model.
+
+Each function returns rows of (name, us_per_call, derived) where `derived`
+is the paper-comparison column (paper value / deviation / rate).
+"""
+
+from __future__ import annotations
+
+from repro.core.exanet import ExanetMPI, Topology, DEFAULT
+from repro.core.exanet.allreduce_accel import accel_allreduce_latency
+from repro.core.exanet.apps import ALL_APPS, PAPER_TABLE3
+from repro.core.exanet.ip_overlay import (baseline_throughput_gbps,
+                                          overlay_rtt,
+                                          overlay_throughput_gbps)
+
+PAPER_TABLE2 = {"intra_fpga": 1.17, "intra_qfdb_sh": 1.293, "mezz_sh": 1.579,
+                "mezz_mh(2)": 2.0, "mezz_mh(3)": 2.111,
+                "inter_mezz(3,1,2)": 2.555}
+
+
+def osu_latency_rows():
+    """Fig. 14 / Tables 1-2: 0B one-way latency over the named paths."""
+    topo = Topology()
+    mpi = ExanetMPI()
+    rows = []
+    for name, (s, d) in topo.table1_paths().items():
+        lat = mpi.net.mpi_latency(0, topo.route(s, d))
+        paper = PAPER_TABLE2[name]
+        rows.append((f"osu_latency/{name}", lat,
+                     f"paper={paper}us dev={100*(lat-paper)/paper:+.1f}%"))
+    # size sweep on the intra-QFDB path (Fig. 14 shape)
+    for size in (0, 8, 32, 64, 4096, 1 << 20, 4 << 20):
+        lat = mpi.osu_latency(size)
+        rows.append((f"osu_latency/intra_qfdb/{size}B", lat,
+                     "eager" if size <= 32 else "rendezvous"))
+    return rows
+
+
+def osu_bw_rows():
+    """Fig. 15: uni/bidirectional bandwidth."""
+    mpi = ExanetMPI()
+    c = DEFAULT.cores_per_mpsoc
+    rows = []
+    for size in (64, 4096, 65536, 1 << 20, 4 << 20):
+        bw16 = mpi.osu_bw(size, 0, c)
+        bw10 = mpi.osu_bw(size, 0, c * DEFAULT.fpgas_per_qfdb)
+        bi = mpi.osu_bibw(size, 0, c)
+        t16 = size * 8.0 / (bw16 * 1000.0)
+        rows.append((f"osu_bw/16G/{size}B", t16,
+                     f"{bw16:.2f}Gbps (paper@4MB: 13.0, util 81.9%)"))
+        rows.append((f"osu_bw/10G/{size}B", size * 8 / (bw10 * 1000),
+                     f"{bw10:.2f}Gbps (paper@4MB: 6.42, util 64.3%)"))
+        rows.append((f"osu_bibw/16G/{size}B", size * 8 / (bi * 1000),
+                     f"{bi:.2f}Gbps (~2x bw - sharing dev)"))
+    return rows
+
+
+def osu_bcast_rows():
+    """Figs. 16+18: broadcast observed vs Eq.1 expectation."""
+    mpi = ExanetMPI()
+    rows = []
+    for n in (4, 16, 64, 256, 512):
+        for size in (1, 4096, 1 << 20):
+            r = mpi.bcast(size, n)
+            rows.append((f"osu_bcast/N{n}/{size}B", r.observed_us,
+                         f"expected(Eq1)={r.expected_us:.2f}us "
+                         f"dev={100*r.deviation:+.1f}%"))
+    return rows
+
+
+def osu_allreduce_rows():
+    """Fig. 17: software allreduce (recursive doubling)."""
+    mpi = ExanetMPI()
+    rows = []
+    for n in (4, 16, 64, 512):
+        for size in (4, 64, 1024):
+            rows.append((f"osu_allreduce/N{n}/{size}B",
+                         mpi.allreduce_sw(size, n), "recursive-doubling"))
+    return rows
+
+
+def allreduce_accel_rows():
+    """Fig. 19: NI Allreduce accelerator vs software, 1 rank/MPSoC."""
+    mpi1 = ExanetMPI(ranks_per_mpsoc=1)
+    rows = []
+    paper_best = {16: 83.4, 32: 86.2, 64: 87.1, 128: 87.9}
+    for n in (16, 32, 64, 128):
+        best = 0.0
+        for size in (4, 64, 256, 1024, 4096):
+            hw = accel_allreduce_latency(size, n)
+            sw = mpi1.allreduce_sw(size, n)
+            best = max(best, 1 - hw / sw)
+            rows.append((f"allreduce_accel/N{n}/{size}B", hw,
+                         f"sw={sw:.2f}us improvement={100*(1-hw/sw):.1f}%"))
+        rows.append((f"allreduce_accel/N{n}/best", 0.0,
+                     f"max_improvement={100*best:.1f}% "
+                     f"(paper {paper_best[n]}%)"))
+    return rows
+
+
+def ip_overlay_rows():
+    """Fig. 13 + §5.3 RTTs."""
+    rows = []
+    ov = overlay_throughput_gbps(65507)
+    base = baseline_throughput_gbps(65507)
+    rows.append(("ip_overlay/udp_large", 65507 * 8 / (ov * 1000),
+                 f"{ov:.2f}Gbps (paper 4.7)"))
+    rows.append(("ip_overlay/baseline_udp_large", 65507 * 8 / (base * 1000),
+                 f"{base:.2f}Gbps (paper 1.3)"))
+    rows.append(("ip_overlay/rtt_poll", overlay_rtt(mode="poll"),
+                 "paper ~90us"))
+    rows.append(("ip_overlay/rtt_sleep", overlay_rtt(mode="sleep"),
+                 "paper ~2.2ms"))
+    return rows
+
+
+def apps_scaling_rows():
+    """Figs. 20-22 / Table 3: weak+strong scaling efficiencies."""
+    rows = []
+    for name, factory in ALL_APPS.items():
+        m = factory()
+        for mode in ("weak", "strong"):
+            for n in (2, 8, 64, 512):
+                r = getattr(m, mode)(n)
+                paper = PAPER_TABLE3[name][mode].get(n)
+                note = (f"paper={paper}%" if paper is not None else
+                        "prediction")
+                tag = " [calibrated]" if r.get("calibrated") else ""
+                rows.append((f"apps/{name}/{mode}/N{n}", r["t_iter_us"],
+                             f"eff={100*r['efficiency']:.1f}% {note}{tag}"))
+    return rows
+
+
+def matmul_accel_rows():
+    """§7: the MatMul accelerator -> Pallas MXU tile. Reports the paper's
+    HLS numbers + the kernel's roofline napkin math for v5e."""
+    from repro.kernels.matmul_tile.ops import flops_per_byte
+    from repro.roofline.hw import V5E
+    p = DEFAULT
+    peak = p.mm_clock_mhz * 1e6 * p.mm_flops_per_cycle / 1e9
+    rows = [
+        ("matmul_accel/tile_exec", p.mm_tile_exec_cycles / p.mm_clock_mhz,
+         f"128x128 tile, {p.mm_flops_per_cycle} flop/cycle"),
+        ("matmul_accel/fpga_gflops", 0.0,
+         f"paper 275 GFLOP/s = {100*p.mm_measured_gflops/peak:.1f}% of "
+         f"{peak:.0f} peak; 17 GFLOPS/W"),
+    ]
+    for mnk in ((1024, 1024, 1024), (4096, 4096, 4096), (8192, 8192, 8192)):
+        ai = flops_per_byte(*mnk)
+        ridge = V5E.peak_bf16_flops / V5E.hbm_bw
+        bound = "compute" if ai > ridge else "memory"
+        t_us = 2.0 * mnk[0] * mnk[1] * mnk[2] / V5E.peak_bf16_flops * 1e6
+        rows.append((f"matmul_accel/v5e/{mnk[0]}^3", t_us,
+                     f"AI={ai:.0f} flops/B ridge={ridge:.0f} -> {bound}-bound"))
+    return rows
+
+
+def collectives_tpu_rows():
+    """Layer B: flat vs hierarchical allreduce wire bytes (napkin model) —
+    the TPU analog of Fig. 19's accelerated-vs-software comparison."""
+    from repro.core.collectives import hierarchical_collective_bytes
+    from repro.core.comm import CommPolicy
+    rows = []
+    pol = CommPolicy()
+    for n_mb in (1, 64, 1024):
+        n = n_mb << 20
+        hb = hierarchical_collective_bytes(n, intra=16, inter=2)
+        t_flat = pol.ring_allreduce_s(n, 512, pol.dcn_bw, pol.alpha_pod_s)
+        t_hier = (pol.ring_allreduce_s(n, 16, pol.ici_bw, pol.alpha_s)
+                  + pol.ring_allreduce_s(n // 16, 2, pol.dcn_bw,
+                                         pol.alpha_pod_s))
+        rows.append((f"collectives/hier_allreduce/{n_mb}MB", t_hier * 1e6,
+                     f"flat={t_flat*1e6:.0f}us speedup={t_flat/t_hier:.1f}x "
+                     f"xpod_bytes/chip {hb['flat']['inter']/1e6:.1f}->"
+                     f"{hb['hier']['inter']/1e6:.2f}MB "
+                     f"({hb['inter_reduction']:.0f}x less)"))
+    thr = pol.eager_threshold_bytes(256)
+    rows.append(("collectives/eager_threshold/256chips", 0.0,
+                 f"{thr}B crossover (paper's eager/rendezvous analog)"))
+    rows.append(("collectives/bucket_bytes/256chips", 0.0,
+                 f"{pol.bucket_bytes(256)>>20}MB bucket (cell/MTU analog)"))
+    return rows

@@ -1,0 +1,79 @@
+"""Roofline report generator (deliverable g): reads results/dryrun JSONs and
+emits the EXPERIMENTS.md §Roofline table + per-cell commentary."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def load(out_dir="results/dryrun"):
+    cells = {}
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        d = json.load(open(f))
+        tag = os.path.basename(f)[:-5]
+        cells[tag] = d
+    return cells
+
+
+def _advice(d):
+    r = d["roofline"]
+    bot = r["bottleneck"]
+    uf = d.get("useful_flops_ratio", 0)
+    if bot == "collective_s":
+        return ("reduce collective volume: hierarchical/cross-pod schedule, "
+                "bigger buckets, EP all-to-all capacity factor")
+    if bot == "memory_s":
+        if uf < 0.2:
+            return ("fuse attention score traffic (Pallas kernel path) / "
+                    "TP-shard the replicated attention (pad heads)")
+        return "raise arithmetic intensity: bigger flash chunks, bf16 accum"
+    return "compute-bound: near roofline; overlap remaining collectives"
+
+
+def markdown_table(cells) -> str:
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s |"
+             " bottleneck | MODEL/HLO flops | roofline frac | peak GB |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for tag, d in cells.items():
+        arch, shape, mesh = tag.rsplit("__", 2)
+        if "skipped" in d:
+            lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if "error" in d:
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR | | | | | | |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck'].replace('_s','')} | "
+            f"{d['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {d['memory']['peak_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def commentary(cells) -> str:
+    out = []
+    for tag, d in cells.items():
+        if "roofline" not in d:
+            continue
+        out.append(f"* `{tag}`: {_advice(d)}")
+    return "\n".join(out)
+
+
+def main():
+    cells = load()
+    print(markdown_table(cells))
+    print()
+    print("### What would move the dominant term")
+    print(commentary(cells))
+
+
+if __name__ == "__main__":
+    main()

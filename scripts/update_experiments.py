@@ -1,0 +1,105 @@
+"""Splice the §Roofline table and §Perf log into EXPERIMENTS.md from
+results/dryrun and results/perf JSONs."""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline_report import load, markdown_table  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def perf_log() -> str:
+    out = []
+    cells = {
+        "starcoder2-prefill": ("starcoder2-7b x prefill_32k x 16x16",
+                               "worst roofline fraction with a structural "
+                               "cause (36 heads don't divide TP=16)"),
+        "dsv3-train": ("deepseek-v3-671b x train_4k x 2x16x16",
+                       "most collective-bound AND most representative of "
+                       "the paper's technique (EP all-to-all over the "
+                       "torus + cross-pod gradient sync)"),
+        "mistral-train": ("mistral-large-123b x train_4k x 16x16",
+                          "largest dense model; balanced compute/memory/"
+                          "collective profile, richest trade-off space"),
+    }
+    for cell, (title, why) in cells.items():
+        path = os.path.join(ROOT, "results", "perf", cell + ".json")
+        if not os.path.exists(path):
+            continue
+        rows = json.load(open(path))
+        out.append(f"### {title}\n\nSelected because: {why}.\n")
+        out.append("| variant | hypothesis | compute_s | memory_s | "
+                   "collective_s | roofline frac | peak GB | verdict |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        base = None
+        for r in rows:
+            if "error" in r:
+                out.append(f"| {r['variant']} | {r['hypothesis'][:70]} | "
+                           f"ERROR | | | | | {r['error'][:40]} |")
+                continue
+            rr = r["roofline"]
+            if base is None:
+                base = rr
+                verdict = "baseline"
+            else:
+                d = (base["step_bound_s"] - rr["step_bound_s"]) \
+                    / base["step_bound_s"]
+                verdict = f"{'+' if d >= 0 else ''}{100*d:.0f}% step bound"
+            out.append(
+                f"| {r['variant']} | {r['hypothesis'][:80]} | "
+                f"{rr['compute_s']:.2f} | {rr['memory_s']:.2f} | "
+                f"{rr['collective_s']:.2f} | {rr['roofline_fraction']:.3f} | "
+                f"{r['memory']['peak_gb']:.1f} | {verdict} |")
+            p = r.get("pallas_attention_projection")
+            if p:
+                out.append(
+                    f"| &nbsp;&nbsp;+pallas-attn (projected) | fused flash "
+                    f"kernel keeps score tensors in VMEM: attn HBM "
+                    f"{p['attn_block_gb']:.0f}->{p['fused_gb']:.0f} GB | "
+                    f"{rr['compute_s']:.2f} | {p['memory_s']:.2f} | "
+                    f"{rr['collective_s']:.2f} | "
+                    f"{p['roofline_fraction']:.3f} | — | projection |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    exp = open(os.path.join(ROOT, "EXPERIMENTS.md")).read()
+    cells = load(os.path.join(ROOT, "results", "dryrun"))
+    table = markdown_table(cells)
+    head, _, _ = exp.partition("<!-- ROOFLINE_TABLE -->")
+    new = (head + "<!-- ROOFLINE_TABLE -->\n\n" + table + "\n\n"
+           + PERF_PREAMBLE + "\n<!-- PERF_LOG -->\n\n" + perf_log() + "\n")
+    open(os.path.join(ROOT, "EXPERIMENTS.md"), "w").write(new)
+    print("EXPERIMENTS.md updated")
+
+
+PERF_PREAMBLE = """## §Perf (hillclimb log)
+
+Method per DESIGN.md: baseline every cell (table above), hillclimb the
+THREE selected cells with explicit hypothesis -> change -> re-lower ->
+confirm/refute cycles (driver: `benchmarks/hillclimb.py`; raw JSON in
+`results/perf/`). The paper-faithful BASELINE rows and the beyond-paper
+optimized rows are both recorded; `+pallas-attn (projected)` rows give the
+analytically projected effect of running the validated Pallas flash
+kernels in place of the XLA-scan attention (score tensors stay in VMEM) —
+a projection, since Pallas TPU kernels cannot execute on the CPU dry-run
+host.
+
+Cross-cutting findings already folded into every baseline (see §Dry-run):
+activation sharding hints (16x), FlashAttention custom-VJP (100x memory),
+int8 optimizer states, microbatching policy. Refuted-and-rolled-back:
+Megatron-style sequence sharding via hints (GSPMD dropped head sharding
+after the per-layer gather -> 7x flops); ZeRO-3 weight-gather hints for
+deepseek-v3 (re-gathers on every remat pass: collectives +10%).
+"""
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.store import (CheckpointStore, save_checkpoint,
+                                    restore_checkpoint, latest_step)
+
+__all__ = ["CheckpointStore", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]

@@ -1,0 +1,84 @@
+"""Topology-aware collectives — the paper's Allreduce accelerator (§4.7)
+re-thought for the TPU mesh (Layer B of DESIGN.md).
+
+The accelerator's 3-phase structure maps axis-for-axis onto the mesh:
+
+  paper                          TPU adaptation
+  ─────────────────────────────  ─────────────────────────────────────────
+  level 0: intra-QFDB clients    reduce-scatter along the *intra* (fast)
+  send to the server FPGA        mesh axis — each chip ends up owning a
+                                 1/k shard of the partially-reduced vector
+  levels 1..log2(N)-1: servers   all-reduce of the 1/k-size shard along
+  recursive-double inter-QFDB    the *inter* (slow/cross-pod) axis
+  final level: servers           all-gather along the intra axis
+  broadcast to clients
+
+Cross-inter-axis traffic drops by the intra-axis size (the accelerator's
+4x = QFDB size; here 16x = the intra axis), which is the entire point when
+the inter axis is cross-pod DCN. The reduction arithmetic itself is the
+``allreduce_combine`` Pallas kernel on TPU backends.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _flat_body(x, axes):
+    return jax.lax.psum(x, axes)
+
+
+def _hier_body(x, intra_axis, inter_axis):
+    n = x.shape[0]
+    k = jax.lax.axis_size(intra_axis)
+    pad = (-n) % k
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    # phase 1: reduce-scatter along the fast axis (intra-QFDB reduce)
+    shard = jax.lax.psum_scatter(x, intra_axis, scatter_dimension=0,
+                                 tiled=True)
+    # phase 2: recursive doubling across the slow axis (server exchange)
+    shard = jax.lax.psum(shard, inter_axis)
+    # phase 3: broadcast back along the fast axis
+    full = jax.lax.all_gather(shard, intra_axis, axis=0, tiled=True)
+    return full[:n] if pad else full
+
+
+def hierarchical_allreduce(x: jnp.ndarray, mesh, *, intra_axis: str = "data",
+                           inter_axis: str = "pod") -> jnp.ndarray:
+    """All-reduce a replicated array over (intra x inter) mesh axes with the
+    accelerator's hierarchical schedule. ``x`` is flattened over dim 0."""
+    body = functools.partial(_hier_body, intra_axis=intra_axis,
+                             inter_axis=inter_axis)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                       check_vma=False)  # replicated-ness over unused axes
+    return fn(x)
+
+
+def flat_allreduce(x: jnp.ndarray, mesh, axes: tuple[str, ...]) -> jnp.ndarray:
+    """Single-phase psum over all axes (the software-allreduce baseline)."""
+    fn = jax.shard_map(functools.partial(_flat_body, axes=axes), mesh=mesh,
+                       in_specs=P(), out_specs=P(), check_vma=False)
+    return fn(x)
+
+
+def hierarchical_collective_bytes(n_bytes: int, intra: int, inter: int
+                                  ) -> dict:
+    """Napkin model of wire bytes per chip for both schedules (used by the
+    CommPolicy and the collectives benchmark).
+
+    ring all-reduce over p chips moves 2(p-1)/p * n bytes per chip; the
+    hierarchical schedule moves 2(k-1)/k * n on the intra axis and
+    2(m-1)/m * n/k on the inter axis."""
+    p = intra * inter
+    flat = {"total": 2 * (p - 1) / p * n_bytes,
+            "inter": 2 * (inter - 1) / inter * n_bytes}  # flat ring crosses
+    hier = {"intra": 2 * (intra - 1) / intra * n_bytes,
+            "inter": 2 * (inter - 1) / inter * n_bytes / intra}
+    hier["total"] = hier["intra"] + hier["inter"]
+    return {"flat": flat, "hier": hier,
+            "inter_reduction": flat["inter"] / max(hier["inter"], 1e-12)}

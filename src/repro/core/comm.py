@@ -1,0 +1,77 @@
+"""CommPolicy: message-size-aware collective strategy selection.
+
+The ExaNet-MPI runtime switches transports at 32 B: packetizer/mailbox
+(latency-optimal, "eager") below, RDMA rendez-vous (bandwidth-optimal)
+above (§5.2.1). The transferable idea is an alpha-beta crossover: pick the
+algorithm by comparing startup-dominated vs wire-dominated cost.
+
+On TPU the same split appears in gradient synchronization:
+* tiny tensors (norm scales, biases) -> fuse into one bucket, single
+  all-reduce (the "eager" path: pay alpha once);
+* bulk tensors -> reduce-scatter + all-gather pipeline, hierarchical across
+  pods (the "rendez-vous" path: pay bandwidth, hide alpha).
+
+Constants are TPU v5e (roofline/hw.py); the policy exposes the predicted
+cost of each choice so EXPERIMENTS.md can show the napkin math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.hw import V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPolicy:
+    #: per-collective launch/latency cost (alpha) in seconds; ICI hop-scale
+    alpha_s: float = 2e-6
+    #: cross-pod (DCN) alpha is orders of magnitude worse
+    alpha_pod_s: float = 5e-5
+    #: ICI per-link bandwidth (beta), bytes/s
+    ici_bw: float = V5E.ici_link_bw
+    #: cross-pod per-chip bandwidth, bytes/s
+    dcn_bw: float = V5E.dcn_bw
+    #: bucket target: amortize alpha to <2% of wire time
+    alpha_amortization: float = 0.02
+
+    def ring_allreduce_s(self, n_bytes: int, p: int, bw: float,
+                         alpha: float) -> float:
+        if p <= 1:
+            return 0.0
+        return 2 * (p - 1) * alpha + 2 * (p - 1) / p * n_bytes / bw
+
+    def oneshot_allreduce_s(self, n_bytes: int, p: int, bw: float,
+                            alpha: float) -> float:
+        """all-gather everything + local reduce: 1 phase, alpha-cheap,
+        bandwidth-expensive (the packetizer analog)."""
+        if p <= 1:
+            return 0.0
+        return alpha + (p - 1) * n_bytes / bw
+
+    def eager_threshold_bytes(self, p: int, *, bw: float | None = None,
+                              alpha: float | None = None) -> int:
+        """Crossover size below which the one-shot schedule wins — the
+        TPU re-derivation of the paper's 32 B eager threshold."""
+        bw = bw or self.ici_bw
+        alpha = alpha or self.alpha_s
+        lo, hi = 1, 1 << 32
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.oneshot_allreduce_s(mid, p, bw, alpha) <= \
+                    self.ring_allreduce_s(mid, p, bw, alpha):
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
+
+    def bucket_bytes(self, p: int) -> int:
+        """Gradient bucket size so the 2(p-1) alpha terms cost <=2% of wire
+        time (the cell/bucket adaptation of §4.2's small-MTU trade-off)."""
+        alpha_total = 2 * (p - 1) * self.alpha_s
+        wire_per_byte = 2 * (p - 1) / p / self.ici_bw
+        return int(alpha_total / self.alpha_amortization / wire_per_byte)
+
+    def choose(self, n_bytes: int, p: int) -> str:
+        return ("eager" if n_bytes <= self.eager_threshold_bytes(p)
+                else "rendezvous")

@@ -1,0 +1,19 @@
+"""Faithful model of the ExaNeSt prototype's ExaNet interconnect (Layer A).
+
+See DESIGN.md §2: this package reproduces the paper's measured communication
+behaviour (Tables 1-3, Figs. 13-22) from component-level constants; the
+TPU-native adaptation of the same ideas lives in :mod:`repro.core.collectives`
+and :mod:`repro.parallel`.
+"""
+
+from repro.core.exanet.params import DEFAULT, HwParams
+from repro.core.exanet.topology import Topology, Path
+from repro.core.exanet.network import Network
+from repro.core.exanet.mpi import ExanetMPI, BcastResult
+from repro.core.exanet.allreduce_accel import (accel_allreduce_latency,
+                                               accel_applicable)
+
+__all__ = [
+    "DEFAULT", "HwParams", "Topology", "Path", "Network", "ExanetMPI",
+    "BcastResult", "accel_allreduce_latency", "accel_applicable",
+]

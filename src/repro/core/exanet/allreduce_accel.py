@@ -1,0 +1,50 @@
+"""Model of the NI-resident MPI_Allreduce accelerator (§4.7, §6.1.5).
+
+Algorithm (Fig. 10): for N ranks (1 rank/MPSoC, whole QFDBs, N multiple of 4):
+
+* Level 0: every *client* module (non-network FPGAs) DMA-fetches its vector
+  and sends it to the QFDB's *server* module (network FPGA), which reduces
+  the 4 local vectors.
+* Levels 1..log2(N)-1: server modules pairwise exchange partial vectors over
+  inter-QFDB links (recursive doubling over QFDBs: log2(N/4) levels) and
+  reduce.
+* Final level: servers broadcast to their clients; clients DMA the reduced
+  vector to memory and notify software.
+
+The engine is triggered once per 256 B block (the max ExaNet cell payload);
+latency therefore scales ~linearly in ceil(size/256) (§6.1.5: 6.79 us ->
+13.38 us -> 26.11 us for 256/512/1024 B at 16 ranks). Above 4 KB the
+accelerator is not profitable and ExaNet-MPI falls back to software.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.exanet.params import DEFAULT, HwParams
+
+
+def accel_applicable(size: int, nranks: int, params: HwParams = DEFAULT) -> bool:
+    """§4.7 constraints: sum/min/max over int/float/double, <=1024 ranks,
+    one rank per FPGA, whole QFDBs (multiples of 4)."""
+    return (nranks % 4 == 0
+            and 4 <= nranks <= params.ar_accel_max_ranks
+            and size <= params.ar_accel_max_vector_bytes)
+
+
+def accel_allreduce_latency(size: int, nranks: int,
+                            params: HwParams = DEFAULT) -> float:
+    """Latency (us) of the accelerated allreduce.
+
+    Per 256 B block: fixed cost (software programming of the modules +
+    level-0 client fetch/send + final broadcast + completion notification +
+    software poll-out, calibrated 4.91 us) + one inter-QFDB server-exchange
+    level per recursive-doubling step over QFDBs (0.94 us/level).
+    """
+    if not accel_applicable(size, nranks, params):
+        raise ValueError(f"accelerator not applicable: size={size} N={nranks}")
+    blocks = max(1, math.ceil(size / params.ar_accel_block_bytes))
+    n_qfdbs = nranks // 4
+    server_levels = int(math.log2(n_qfdbs)) if n_qfdbs > 1 else 0
+    per_block = params.ar_accel_fixed_us + server_levels * params.ar_accel_level_us
+    return blocks * per_block

@@ -1,0 +1,170 @@
+"""ExaNet-MPI runtime model (§5.2.1) + OSU-style microbenchmarks (§6.1).
+
+Point-to-point: eager (<=32 B) via packetizer/mailbox; rendez-vous otherwise
+(RTS -> CTS -> RDMA write + concurrent completion notification).
+
+Collectives use the MPICH 3.2.1 algorithms the paper used (§5.2.1):
+binomial tree for broadcast, recursive doubling for allreduce.
+
+Rank placement is block-packed (4 ranks/MPSoC fills cores first), matching
+the §6.1.4 schedule decomposition: binomial step distance >=16 crosses a
+QFDB ("mezzanine-class" step), >=4 crosses an MPSoC ("QFDB-class" step),
+otherwise it is an intra-MPSoC step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.exanet.network import Network
+from repro.core.exanet.params import DEFAULT, HwParams
+from repro.core.exanet.topology import Topology
+
+
+@dataclasses.dataclass
+class BcastResult:
+    observed_us: float
+    expected_us: float      # Eq. 1 analytic model
+    steps: dict[str, int]   # Ns_MPSoC / Ns_QFDB / Ns_mezzanine
+
+    @property
+    def deviation(self) -> float:
+        """(observed - expected)/observed, the paper's §6.1.4 metric."""
+        return (self.observed_us - self.expected_us) / self.observed_us
+
+
+class ExanetMPI:
+    def __init__(self, params: HwParams = DEFAULT, *,
+                 ranks_per_mpsoc: int | None = None):
+        self.p = params
+        self.topo = Topology(params)
+        self.net = Network(self.topo, params)
+        self._rpm = ranks_per_mpsoc
+
+    # --------------------------------------------------------- rank placement
+    def rank_core(self, rank: int) -> int:
+        """Block placement. With ranks_per_mpsoc=1 (accelerator comparisons,
+        §6.1.5) each rank occupies core 0 of its own MPSoC."""
+        if self._rpm == 1:
+            return rank * self.p.cores_per_mpsoc
+        return rank
+
+    # ------------------------------------------------------- microbenchmarks
+    def osu_latency(self, size: int, r0: int = 0, r1: int | None = None) -> float:
+        """Half ping-pong latency (osu_latency)."""
+        if r1 is None:
+            r1 = self.p.cores_per_mpsoc  # intra-QFDB neighbour by default
+        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
+        return self.net.mpi_latency(size, path)
+
+    def osu_one_way(self, size: int, r0: int, r1: int) -> float:
+        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
+        return self.net.mpi_latency(size, path, one_way=True)
+
+    def osu_bw(self, size: int, r0: int = 0, r1: int | None = None) -> float:
+        if r1 is None:
+            r1 = self.p.cores_per_mpsoc
+        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
+        return self.net.osu_bw_gbps(size, path)
+
+    def osu_bibw(self, size: int, r0: int = 0, r1: int | None = None) -> float:
+        if r1 is None:
+            r1 = self.p.cores_per_mpsoc
+        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
+        return self.net.osu_bibw_gbps(size, path)
+
+    # ------------------------------------------------------------- broadcast
+    def _binomial_schedule(self, n: int) -> list[list[tuple[int, int]]]:
+        """Binomial-tree (MPICH) broadcast schedule: list of steps, each a
+        list of (src_rank, dst_rank) pairs. Step distances N/2, N/4, ..., 1."""
+        steps = []
+        d = n // 2
+        while d >= 1:
+            pairs = [(r, r + d) for r in range(0, n, 2 * d) if r + d < n]
+            steps.append(pairs)
+            d //= 2
+        return steps
+
+    def _step_class(self, pairs: list[tuple[int, int]]) -> str:
+        src, dst = pairs[0]
+        d = abs(dst - src) * (self.p.cores_per_mpsoc if self._rpm == 1 else 1)
+        cpq = self.p.cores_per_mpsoc * self.p.fpgas_per_qfdb
+        if d >= cpq:
+            return "mezzanine"
+        if d >= self.p.cores_per_mpsoc:
+            return "qfdb"
+        return "mpsoc"
+
+    def bcast(self, size: int, nranks: int) -> BcastResult:
+        """Event-simulated binomial broadcast vs the Eq. 1 expectation."""
+        assert nranks & (nranks - 1) == 0, "power-of-two ranks as in §6.1.4"
+        self.net.reset()
+        clocks = [0.0] * nranks
+        schedule = self._binomial_schedule(nranks)
+        counts = {"mpsoc": 0, "qfdb": 0, "mezzanine": 0}
+        for pairs in schedule:
+            counts[self._step_class(pairs)] += 1
+            for (s, d) in pairs:
+                res = self.net.send(self.rank_core(s), self.rank_core(d), size,
+                                    clocks[s], one_way=True)
+                clocks[d] = max(clocks[d], res.t_complete)
+                clocks[s] = res.t_sender_free
+            # deterministic stand-in for per-step late-arrival noise (§6.1.4)
+            clocks = [c + self.p.step_sync_us for c in clocks]
+        observed = max(clocks) + self.p.barrier_exit_us
+        expected = self.bcast_expected(size, counts)
+        return BcastResult(observed, expected, dict(counts))
+
+    def bcast_expected(self, size: int, counts: dict[str, int]) -> float:
+        """Eq. 1: L_exp = Ns_MPSoC*L_MPSoC + Ns_QFDB*L_QFDB + Ns_mezz*L_mezz,
+        with one-way latencies from osu_one_way_lat over representative
+        single-hop paths (§6.1.4)."""
+        c = self.p.cores_per_mpsoc
+        l_mpsoc = self.osu_one_way_core(size, 0, 1)
+        l_qfdb = self.osu_one_way_core(size, 0, c)
+        l_mezz = self.osu_one_way_core(size, 0, c * self.p.fpgas_per_qfdb)
+        return (counts["mpsoc"] * l_mpsoc + counts["qfdb"] * l_qfdb
+                + counts["mezzanine"] * l_mezz)
+
+    def osu_one_way_core(self, size: int, c0: int, c1: int) -> float:
+        path = self.topo.route(c0, c1)
+        return self.net.mpi_latency(size, path, one_way=True)
+
+    # ------------------------------------------------------------- allreduce
+    def allreduce_sw(self, size: int, nranks: int) -> float:
+        """Recursive-doubling software allreduce (§6.1.3): per step an
+        MPI_Sendrecv (full exchange) + MPI_Reduce_local; one memcpy in, one
+        memcpy out. Event-simulated with R5/DMA contention."""
+        assert nranks & (nranks - 1) == 0
+        self.net.reset()
+        p = self.p
+        t_cpy = size / p.a53_copy_bw_bytes_per_us + p.a53_call_overhead_us
+        t_red = 3.0 * size / p.a53_copy_bw_bytes_per_us + p.a53_call_overhead_us
+        rdv = size > p.mpi_eager_max_bytes
+        penalty = p.sendrecv_sw_rdv_us if rdv else p.sendrecv_sw_eager_us
+        clocks = [t_cpy] * nranks
+        for i in range(int(math.log2(nranks))):
+            d = 1 << i
+            arrivals = [0.0] * nranks
+            done = [0.0] * nranks
+            for r in range(nranks):
+                partner = r ^ d
+                res = self.net.send(self.rank_core(r), self.rank_core(partner),
+                                    size, clocks[r])
+                arrivals[partner] = max(arrivals[partner], res.t_complete)
+                done[r] = res.t_sender_free
+            if rdv:
+                # end-to-end ACK processing is a second R5 invocation on the
+                # sender's MPSoC (§4.5.2) and serializes with other channels.
+                for r in range(nranks):
+                    m = self.topo.core_to_mpsoc(self.rank_core(r))
+                    done[r] = self.net.charge_r5(m, done[r])
+            for r in range(nranks):
+                # sendrecv returns when both directions complete; then reduce
+                clocks[r] = max(done[r], arrivals[r]) + penalty + t_red
+        return max(clocks) + t_cpy + p.barrier_exit_us
+
+    def allreduce_hw(self, size: int, nranks: int) -> float:
+        from repro.core.exanet.allreduce_accel import accel_allreduce_latency
+        return accel_allreduce_latency(size, nranks, self.p)

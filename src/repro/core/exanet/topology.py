@@ -1,0 +1,208 @@
+"""ExaNeSt prototype topology (§3, §4.1).
+
+Structure: ``mezzanine (blade) -> QFDB -> MPSoC (FPGA) -> A53 core``.
+
+* 4 MPSoCs per QFDB, fully connected with 16 Gb/s GTH pairs; only FPGA 0
+  (the "Network MPSoC", F1 in the paper's naming) has external links.
+* QFDBs form a 3D torus over 10 Gb/s mezzanine-level links:
+  X = 4 QFDBs inside a blade (ring), Y = 4 blades of a quad-blade group
+  (ring), Z = 2 quad-blade groups.
+* Routing is dimension-ordered X->Y->Z (§4.2, deadlock-free single path),
+  with intra-QFDB first/last hops to reach the Network MPSoC.
+
+Core ids are block-packed: consecutive ranks fill the cores of an MPSoC,
+then the MPSoCs of a QFDB, then the QFDBs of a mezzanine (matches the
+broadcast schedule decomposition of §6.1.4: step distance >=16 crosses a
+QFDB boundary, >=4 crosses an MPSoC boundary).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from repro.core.exanet.params import DEFAULT, HwParams
+
+#: link classes
+INTRA_QFDB = "intra_qfdb"  # 16 Gb/s GTH inside a QFDB
+MEZZ = "mezz"              # 10 Gb/s mezzanine-level (intra- or inter-blade)
+LOOPBACK = "loopback"      # same MPSoC / same FPGA
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    kind: str          # INTRA_QFDB | MEZZ
+    src_mpsoc: int
+    dst_mpsoc: int
+
+    @property
+    def key(self) -> tuple:
+        return (self.kind, self.src_mpsoc, self.dst_mpsoc)
+
+
+@dataclasses.dataclass(frozen=True)
+class Path:
+    """A routed path between two cores."""
+    src_core: int
+    dst_core: int
+    links: tuple[Link, ...]
+    n_routers: int          # ExaNet (APEnet-class) router traversals
+    same_mpsoc: bool
+
+    @property
+    def n_mezz_links(self) -> int:
+        return sum(1 for l in self.links if l.kind == MEZZ)
+
+    @property
+    def n_intra_qfdb_links(self) -> int:
+        return sum(1 for l in self.links if l.kind == INTRA_QFDB)
+
+    @property
+    def kind(self) -> str:
+        """Classification matching Table 1 of the paper."""
+        if self.same_mpsoc:
+            return "intra_fpga"
+        if not self.links:
+            return "intra_fpga"
+        m, k = self.n_mezz_links, self.n_intra_qfdb_links
+        if m == 0:
+            return "intra_qfdb_sh"
+        # distinguishing intra- vs inter-mezzanine needs coordinates; the
+        # latency model only depends on (m, k), mirroring Table 1 rows b-e.
+        if m == 1 and k == 0:
+            return "mezz_sh"
+        if m == 1:
+            return f"mezz_mh({1 + k})"
+        return f"inter_mezz({m},{k})"
+
+
+class Topology:
+    def __init__(self, params: HwParams = DEFAULT):
+        self.p = params
+        self.cores_per_mpsoc = params.cores_per_mpsoc
+        self.fpgas_per_qfdb = params.fpgas_per_qfdb
+        self.qfdbs_per_mezz = params.qfdbs_per_mezzanine
+        self.mezzanines = params.mezzanines
+        self.n_cores = params.n_cores
+        self.n_mpsocs = params.n_mpsocs
+        self.n_qfdbs = params.n_qfdbs
+
+    # ------------------------------------------------------------ id helpers
+    def core_to_mpsoc(self, core: int) -> int:
+        return core // self.cores_per_mpsoc
+
+    def mpsoc_to_qfdb(self, mpsoc: int) -> int:
+        return mpsoc // self.fpgas_per_qfdb
+
+    def mpsoc_fpga_index(self, mpsoc: int) -> int:
+        return mpsoc % self.fpgas_per_qfdb
+
+    def qfdb_coords(self, qfdb: int) -> tuple[int, int, int]:
+        """QFDB -> (x, y, z) torus coordinates."""
+        mezz = qfdb // self.qfdbs_per_mezz
+        x = qfdb % self.qfdbs_per_mezz
+        y = mezz % 4
+        z = mezz // 4
+        return (x, y, z)
+
+    def coords_to_qfdb(self, x: int, y: int, z: int) -> int:
+        mezz = z * 4 + y
+        return mezz * self.qfdbs_per_mezz + x
+
+    def network_mpsoc(self, qfdb: int) -> int:
+        """FPGA 0 of a QFDB is the Network MPSoC (§3.1)."""
+        return qfdb * self.fpgas_per_qfdb
+
+    # --------------------------------------------------------------- routing
+    @staticmethod
+    def _ring_steps(a: int, b: int, size: int) -> Iterator[int]:
+        """Dimension-ordered steps from coordinate a to b on a ring."""
+        if a == b:
+            return
+        fwd = (b - a) % size
+        bwd = (a - b) % size
+        step = 1 if fwd <= bwd else -1
+        cur = a
+        while cur != b:
+            cur = (cur + step) % size
+            yield cur
+
+    def route(self, src_core: int, dst_core: int) -> Path:
+        """Dimension-ordered route; returns the link sequence + router count.
+
+        Router traversals: the message enters the source QFDB's Network-MPSoC
+        router, then one router per intermediate/destination QFDB on the
+        torus path — i.e. (#mezzanine-level links + 1) routers when it leaves
+        the QFDB, matching the paper's N+1-switches rule (§6.1.1).
+        """
+        sm, dm = self.core_to_mpsoc(src_core), self.core_to_mpsoc(dst_core)
+        if sm == dm:
+            return Path(src_core, dst_core, (), 0, True)
+        sq, dq = self.mpsoc_to_qfdb(sm), self.mpsoc_to_qfdb(dm)
+        links: list[Link] = []
+        n_routers = 0
+        if sq == dq:
+            # full crossbar inside the QFDB (§4.1)
+            links.append(Link(INTRA_QFDB, sm, dm))
+            return Path(src_core, dst_core, tuple(links), 0, False)
+        # hop to the network MPSoC of the source QFDB if needed
+        cur_mpsoc = sm
+        net = self.network_mpsoc(sq)
+        if cur_mpsoc != net:
+            links.append(Link(INTRA_QFDB, cur_mpsoc, net))
+            cur_mpsoc = net
+        n_routers += 1  # source QFDB router
+        # torus X -> Y -> Z between QFDBs
+        (sx, sy, sz) = self.qfdb_coords(sq)
+        (dx, dy, dz) = self.qfdb_coords(dq)
+        cur = (sx, sy, sz)
+        hops: list[tuple[int, int, int]] = []
+        for x in self._ring_steps(sx, dx, self.qfdbs_per_mezz):
+            cur = (x, cur[1], cur[2])
+            hops.append(cur)
+        for y in self._ring_steps(sy, dy, 4):
+            cur = (cur[0], y, cur[2])
+            hops.append(cur)
+        for z in self._ring_steps(sz, dz, 2):
+            cur = (cur[0], cur[1], z)
+            hops.append(cur)
+        for h in hops:
+            nxt = self.network_mpsoc(self.coords_to_qfdb(*h))
+            links.append(Link(MEZZ, cur_mpsoc, nxt))
+            cur_mpsoc = nxt
+            n_routers += 1  # router of every traversed QFDB
+        # final intra-QFDB hop
+        if cur_mpsoc != dm:
+            links.append(Link(INTRA_QFDB, cur_mpsoc, dm))
+        return Path(src_core, dst_core, tuple(links), n_routers, False)
+
+    # ----------------------------------------------------- named Table-1 paths
+    def table1_paths(self) -> dict[str, tuple[int, int]]:
+        """Representative (src_core, dst_core) pairs for Table 1/2 rows."""
+        c = self.cores_per_mpsoc
+        q = self.fpgas_per_qfdb * c  # cores per QFDB
+        return {
+            # (f) intra-FPGA: two ranks on the same MPSoC
+            "intra_fpga": (0, 1),
+            # (a) Intra-QFDB-sh: M1QAF1 - M1QAF2
+            "intra_qfdb_sh": (0, c),
+            # (b) Intra-mezz-sh: M1QAF1 - M1QBF1 (network FPGAs, adjacent QFDBs)
+            "mezz_sh": (0, q),
+            # (c) Intra-mezz-mh(2): M1QAF1 - M1QBF2
+            "mezz_mh(2)": (0, q + c),
+            # (d) Intra-mezz-mh(3): M1QAF2 - M1QBF3
+            "mezz_mh(3)": (c, q + 2 * c),
+            # (e) Inter-mezz(3,1,2): 3 inter-mezz + 1 intra-mezz + 2 intra-QFDB
+            "inter_mezz(3,1,2)": self._inter_mezz_312(),
+        }
+
+    def _inter_mezz_312(self) -> tuple[int, int]:
+        """A pair whose dimension-ordered route crosses 4 mezzanine-level
+        links (1 X + 2 Y + 1 Z in our torus == the paper's 3 inter-mezz +
+        1 intra-mezz) and 2 intra-QFDB links."""
+        c = self.cores_per_mpsoc
+        src_q = self.coords_to_qfdb(0, 0, 0)
+        dst_q = self.coords_to_qfdb(1, 2, 1)
+        src = src_q * self.fpgas_per_qfdb * c + c       # F2 of src QFDB
+        dst = dst_q * self.fpgas_per_qfdb * c + 2 * c   # F3 of dst QFDB
+        return (src, dst)

@@ -1,0 +1,53 @@
+"""GVAS (§4.3) -> jax.Array mapping.
+
+The paper's 80-bit Global Virtual Address is (PDID | node | rank | VA):
+any NI can read/write any process's memory through SMMU translation. The
+TPU/JAX analog is a global ``jax.Array`` over the mesh:
+
+  PDID  -> the Mesh itself (a protection/process-group boundary)
+  node  -> mesh coordinates of a chip
+  rank  -> the named-axis index along each mesh axis
+  VA    -> index into the addressable global array; NamedSharding is the
+           translation table ("SMMU") from global index to (chip, local)
+
+``addr_of`` / ``shard_of`` make the mapping concrete; they are used by the
+checkpoint re-sharder and tested in tests/test_gvas.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding
+
+
+def addr_of(arr: jax.Array, global_index: tuple[int, ...]) -> dict:
+    """The GVAS 'address' of one element: owning device(s) + local index."""
+    sharding = arr.sharding
+    assert isinstance(sharding, NamedSharding)
+    out = []
+    for dev, idx in sharding.devices_indices_map(arr.shape).items():
+        local = []
+        inside = True
+        for (gi, sl, dim) in zip(global_index, idx, arr.shape):
+            start = sl.start or 0
+            stop = sl.stop if sl.stop is not None else dim
+            if not (start <= gi < stop):
+                inside = False
+                break
+            local.append(gi - start)
+        if inside:
+            out.append({"device": dev.id, "local_index": tuple(local)})
+    return {"global_index": tuple(global_index), "replicas": out}
+
+
+def shard_of(arr: jax.Array, device_id: int) -> np.ndarray | None:
+    """The local VA window of one device (None if it holds no shard)."""
+    for s in arr.addressable_shards:
+        if s.device.id == device_id:
+            return np.asarray(s.data)
+    return None
+
+
+def global_bytes(arr: jax.Array) -> int:
+    return int(np.prod(arr.shape)) * arr.dtype.itemsize

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, Prefetcher, make_batch_specs
+
+__all__ = ["SyntheticTokens", "Prefetcher", "make_batch_specs"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package provides ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jitted wrapper with CPU fallback) and ``ref.py`` (pure-jnp
+oracle). Kernels are validated on CPU in ``interpret=True`` mode; on TPU
+backends the wrappers dispatch to the compiled kernels.
+
+* ``matmul_tile``       — §7 MatMul accelerator -> 128x128xK MXU tiling
+* ``allreduce_combine`` — §4.7 Allreduce accelerator reduction arithmetic
+* ``flash_decode``      — decode attention over long KV (decode/long shapes)
+* ``ssd_scan``          — Mamba-2 SSD chunk processor (mamba2/zamba2 archs)
+"""
+
+from repro.kernels.matmul_tile.ops import matmul
+from repro.kernels.allreduce_combine.ops import combine_parts
+from repro.kernels.flash_decode.ops import decode_attn
+from repro.kernels.ssd_scan.ops import ssd
+
+__all__ = ["matmul", "combine_parts", "decode_attn", "ssd"]

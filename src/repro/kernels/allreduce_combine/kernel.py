@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: block-pipelined multi-operand reduction.
+
+TPU adaptation of the paper's §4.7 Allreduce accelerator arithmetic: the NI
+reduces incoming 256 B cells against a local partial vector as blocks
+stream in. 256 B is far below VPU granularity, so the "cell" becomes a
+(parts x block) VMEM tile: the grid walks the vector in ``block`` chunks
+and each step reduces ``n_parts`` operands (f32 accumulation for sum —
+matching the accelerator's int/float/double exactness guarantee).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(x_ref, o_ref, *, op: str):
+    x = x_ref[...]
+    if op == "sum":
+        o_ref[...] = jnp.sum(x.astype(jnp.float32), axis=0).astype(o_ref.dtype)
+    elif op == "max":
+        o_ref[...] = jnp.max(x, axis=0)
+    elif op == "min":
+        o_ref[...] = jnp.min(x, axis=0)
+    else:
+        raise ValueError(op)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block", "interpret"))
+def combine(stacked: jnp.ndarray, *, op: str = "sum", block: int = 2048,
+            interpret: bool = False) -> jnp.ndarray:
+    """stacked: (n_parts, L) -> (L,). L is padded to a lane-aligned block."""
+    P, L = stacked.shape
+    block = min(block, L) if L % (min(block, L)) == 0 else L
+    if L % block != 0:
+        block = L
+    grid = (L // block,)
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((P, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), stacked.dtype),
+        interpret=interpret,
+    )(stacked)

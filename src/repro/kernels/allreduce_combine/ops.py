@@ -1,0 +1,19 @@
+"""Jitted wrapper: combine used by hierarchical-allreduce stages."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.allreduce_combine.kernel import combine
+from repro.kernels.allreduce_combine.ref import combine_ref
+
+
+def combine_parts(stacked: jnp.ndarray, *, op: str = "sum",
+                  use_pallas: bool | None = None,
+                  interpret: bool = False) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if use_pallas:
+        return combine(stacked, op=op, interpret=interpret)
+    return combine_ref(stacked, op=op)

@@ -1,0 +1,17 @@
+"""Oracle for the multi-operand combine (allreduce reduction arithmetic)."""
+
+import jax.numpy as jnp
+
+OPS = {
+    "sum": jnp.sum,
+    "max": jnp.max,
+    "min": jnp.min,
+}
+
+
+def combine_ref(stacked: jnp.ndarray, op: str = "sum") -> jnp.ndarray:
+    """stacked: (n_parts, L) -> (L,) elementwise reduce with f32 accumulation
+    (sum); min/max reduce in the native dtype."""
+    if op == "sum":
+        return jnp.sum(stacked.astype(jnp.float32), axis=0).astype(stacked.dtype)
+    return OPS[op](stacked, axis=0)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: flash-decode — one query token vs a long KV cache.
+
+Memory-bound by the KV stream (the ``decode_32k``/``long_500k`` shapes):
+the grid walks KV chunks; online-softmax state (m, l, acc) lives in VMEM
+scratch across the chunk sweep. Grid = (B, K_heads, S/chunk) with the chunk
+dimension innermost — the TPU analog of split-K flash decoding, except the
+"split" is the sequential VMEM-resident sweep (chips don't need CUDA-style
+SM rebalancing; the ICI-sharded variant splits S across the mesh instead).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (rep, dk)
+    k = k_ref[0, 0].astype(jnp.float32)          # (chunk, dk)
+    v = v_ref[0, 0].astype(jnp.float32)          # (chunk, dv)
+    s = jnp.dot(q, k.T) * (q.shape[-1] ** -0.5)  # (rep, chunk)
+    pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def flash_decode(q, k, v, length, *, chunk: int = 1024,
+                 interpret: bool = False):
+    """q: (B,H,dk); k: (B,S,K,dk); v: (B,S,K,dv); length: scalar int32.
+    Returns (B,H,dv)."""
+    B, H, dk = q.shape
+    _, S, K, dv = v.shape
+    rep = H // K
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    qg = q.reshape(B, K, rep, dk)
+    kk = jnp.moveaxis(k, 2, 1)  # (B,K,S,dk)
+    vv = jnp.moveaxis(v, 2, 1)
+    grid = (B, K, n_chunks)
+    out = pl.pallas_call(
+        functools.partial(_fd_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, rep, dk), lambda b, g, c: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda b, g, c: (b, g, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dv), lambda b, g, c: (b, g, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, dv), lambda b, g, c: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, rep, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(length, jnp.int32).reshape(1), qg.reshape(B, K, rep, dk),
+      kk.reshape(B, K, S, dk), vv.reshape(B, K, S, dv))
+    return out.reshape(B, H, dv)

@@ -1,0 +1,27 @@
+"""Jitted wrapper for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode
+from repro.kernels.flash_decode.ref import decode_attention_ref
+
+
+def decode_attn(q, k, v, length=None, *, use_pallas: bool | None = None,
+                interpret: bool = False, chunk: int = 1024):
+    """q: (B,H,dk); caches (B,S,K,d*). Memory-bound decode attention."""
+    S = k.shape[1]
+    length = S if length is None else length
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if use_pallas:
+        return flash_decode(q, k, v, length, chunk=chunk, interpret=interpret)
+    return decode_attention_ref(q, k, v, length)
+
+
+def hbm_bytes(batch: int, seq: int, kv_heads: int, head_dim: int,
+              dtype_bytes: int = 2) -> int:
+    """Roofline napkin math: decode attention streams the whole KV cache."""
+    return 2 * batch * seq * kv_heads * head_dim * dtype_bytes

@@ -1,0 +1,21 @@
+"""Oracle for decode attention (one query token vs a long KV cache)."""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, length=None):
+    """q: (B,H,dk); k: (B,S,K,dk); v: (B,S,K,dv); H % K == 0.
+    Attends to positions < length (default: all)."""
+    B, H, dk = q.shape
+    _, S, K, dv = v.shape
+    rep = H // K
+    qg = q.reshape(B, K, rep, dk).astype(jnp.float32)
+    s = jnp.einsum("bgrh,bkgh->bgrk", qg, k.astype(jnp.float32)) * dk ** -0.5
+    if length is not None:
+        s = jnp.where(jnp.arange(S)[None, None, None] < length, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, dv).astype(q.dtype)
+
+
+import jax  # noqa: E402  (used above lazily)

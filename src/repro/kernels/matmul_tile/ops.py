@@ -1,0 +1,28 @@
+"""Jitted public wrapper for the tiled matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul_tile.kernel import matmul_tile
+from repro.kernels.matmul_tile.ref import matmul_ref
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, use_pallas: bool | None = None,
+           interpret: bool = False, **tile_kw) -> jnp.ndarray:
+    """Tiled matmul. On TPU backends uses the Pallas kernel; elsewhere falls
+    back to the jnp oracle unless ``interpret=True`` forces the kernel body
+    to run interpreted (correctness validation on CPU)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if use_pallas:
+        return matmul_tile(a, b, interpret=interpret, **tile_kw)
+    return matmul_ref(a, b)
+
+
+def flops_per_byte(m: int, n: int, k: int, dtype_bytes: int = 2) -> float:
+    """Arithmetic intensity of the full problem (roofline napkin math)."""
+    flops = 2.0 * m * n * k
+    byts = dtype_bytes * (m * k + k * n + m * n)
+    return flops / byts

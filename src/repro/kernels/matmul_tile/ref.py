@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the tiled matmul kernel (paper §7)."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation, result in A's dtype."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

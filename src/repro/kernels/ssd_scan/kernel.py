@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk processor.
+
+One grid step processes one (batch, head-block, chunk) cell entirely in
+VMEM: the (chunk x chunk) decay-masked dual form (MXU matmuls) plus the
+carried inter-chunk state, which lives in a VMEM scratch accumulator across
+the chunk sweep — the sequential dependence is the innermost grid dim.
+
+Head blocking keeps the working set in VMEM: per step it holds
+x (c x hb*p), B/C (c x n), the (c x c) mask and the (hb, p, n) state.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_ref,
+                *, chunk: int, n_chunks: int):
+    z = pl.program_id(2)
+
+    @pl.when(z == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)   # (c, hb, p)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)  # (c, hb)
+    A = a_ref[0].astype(jnp.float32)             # (hb,)
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (c, n)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (c, n)
+
+    dA = dt * A[None, :]                   # (c, hb)
+    cs = jnp.cumsum(dA, axis=0)            # (c, hb)
+    # within-chunk decay L[i,j] = exp(cs_i - cs_j) for i >= j
+    seg = cs[:, None, :] - cs[None, :, :]  # (c, c, hb)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri[..., None], jnp.exp(seg), 0.0)
+    CB = jnp.dot(Cm, Bm.T)                 # (c, c)
+    M = CB[..., None] * L                  # (c, c, hb)
+    xdt = x * dt[..., None]                # (c, hb, p)
+    y_diag = jnp.einsum("csh,shp->chp", M, xdt)
+
+    # inter-chunk: contribution of the entering state
+    state = state_ref[...]                 # (hb, p, n)
+    decay_in = jnp.exp(cs)                 # (c, hb)
+    y_off = jnp.einsum("cn,hpn,ch->chp", Cm, state, decay_in)
+    y_ref[0, 0, :, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # update carried state
+    decay_out = jnp.exp(cs[-1:, :] - cs)   # (c, hb)
+    new_contrib = jnp.einsum("cn,ch,chp->hpn", Bm, decay_out, xdt)
+    chunk_decay = jnp.exp(cs[-1, :])       # (hb,)
+    state_ref[...] = state * chunk_decay[:, None, None] + new_contrib
+
+    @pl.when(z == n_chunks - 1)
+    def _emit():
+        st_ref[0, 0] = state_ref[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block",
+                                             "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, head_block: int = 8,
+             interpret: bool = False):
+    """x: (b,l,h,p); dt: (b,l,h) f32; A: (h,); B, C: (b,l,1,n) (n_groups=1).
+    Returns (y (b,l,h,p) f32, final_state (b,h,p,n) f32)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert B.shape[2] == 1, "kernel supports n_groups=1 (both assigned archs)"
+    hb = min(head_block, h)
+    assert h % hb == 0 and l % chunk == 0, (h, hb, l, chunk)
+    n_chunks = l // chunk
+    grid = (b, h // hb, n_chunks)
+    xr = x.reshape(b, n_chunks, chunk, h // hb, hb, p)
+    dtr = dt.reshape(b, n_chunks, chunk, h // hb, hb)
+    Ar = A.reshape(h // hb, hb)
+    Br = B[:, :, 0].reshape(b, n_chunks, chunk, n)
+    Cr = C[:, :, 0].reshape(b, n_chunks, chunk, n)
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, hb, p),
+                         lambda i, j, z: (i, z, 0, j, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, 1, hb),
+                         lambda i, j, z: (i, z, 0, j, 0)),
+            pl.BlockSpec((1, hb), lambda i, j, z: (j, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, z: (i, z, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, z: (i, z, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, hb, p),
+                         lambda i, j, z: (i, z, 0, j, 0, 0)),
+            pl.BlockSpec((1, 1, hb, p, n), lambda i, j, z: (i, j, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_chunks, chunk, h // hb, hb, p),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((b, h // hb, hb, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, p, n), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, Ar, Br, Cr)
+    return (y.reshape(b, l, h, p), st.reshape(b, h, p, n))

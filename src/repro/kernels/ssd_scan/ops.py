@@ -1,0 +1,17 @@
+"""Jitted wrapper for the SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def ssd(x, dt, A, B, C, *, use_pallas: bool | None = None,
+        interpret: bool = False, chunk: int = 256):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if use_pallas:
+        return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return ssd_ref(x, dt, A, B, C)

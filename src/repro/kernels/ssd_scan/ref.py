@@ -1,0 +1,31 @@
+"""Oracle for the Mamba-2 SSD chunk scan: naive sequential recurrence."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence (exact semantics of the chunked dual form).
+
+    x: (b,l,h,p); dt: (b,l,h) f32 post-softplus; A: (h,) f32 (<0);
+    B, C: (b,l,g,n) with h % g == 0.
+    Returns (y: (b,l,h,p) f32, final_state: (b,h,p,n) f32).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)  # (b,l,h,n)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+
+    def step(state, t):
+        dA = jnp.exp(dt[:, t] * A)                       # (b,h)
+        xdt = xf[:, t] * dt[:, t][..., None]             # (b,h,p)
+        state = state * dA[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhpn", Bf[:, t], xdt)
+        y = jnp.einsum("bhn,bhpn->bhp", Cf[:, t], state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(step, state0, jnp.arange(l))
+    return jnp.moveaxis(ys, 0, 1), final

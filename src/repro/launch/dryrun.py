@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For one (arch x shape x mesh) cell: build the step function the real
+launcher uses, ``jax.jit(...).lower(**specs).compile()`` it against
+ShapeDtypeStruct stand-ins (no allocation), and record:
+
+* ``memory_analysis()``  — per-device bytes (proves it fits),
+* ``cost_analysis()``    — per-device FLOPs / bytes accessed,
+* collective bytes      — parsed from the optimized HLO text, split by op
+  kind (all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute),
+* the roofline terms (repro.roofline.analysis).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v3-671b \
+      --shape train_4k --mesh multi --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+NOTE: the XLA_FLAGS line above must execute before ANY jax import — jax
+locks the device count on first init. Only this entry point sets it;
+tests/benches see the real single device.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SHAPES, ArchConfig, ShapeConfig, cell_runnable
+from repro.configs import ALL_ARCHS, get
+from repro.launch.mesh import make_parallel_ctx, make_production_mesh
+from repro.models import build_model
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     opt_state_specs)
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.loop import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, model) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.vision is not None:
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision.n_patches, cfg.d_model), f32)
+        if cfg.encdec is not None:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encdec.encoder_seq, cfg.d_model), f32)
+        return batch
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {"cache": cache,
+            "batch": {"token": jax.ShapeDtypeStruct((B,), i32),
+                      "pos": jax.ShapeDtypeStruct((), i32)}}
+
+
+def _sharding_tree(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_config(cfg: ArchConfig) -> AdamWConfig:
+    # int8 optimizer states once f32 m/v would not fit a 256-chip pod
+    quantize = cfg.param_count() * 10 > 256 * 12e9
+    return AdamWConfig(quantize_states=quantize)
+
+
+def _train_policy(cfg: ArchConfig, shape: ShapeConfig, pctx) -> dict:
+    """Microbatch count + grad-accumulation dtype so remat-saved layer
+    inputs fit HBM: act ~= tokens/dev * d_model * n_layers * 2B / mb."""
+    import math
+    dp = pctx.dp_size
+    tokens_dev = shape.global_batch * shape.seq_len // dp
+    act = tokens_dev * cfg.d_model * cfg.n_layers * 2
+    mb = 1
+    max_mb = max(1, shape.global_batch // dp)
+    while act / mb > 4e9 and mb * 2 <= min(max_mb, 16):
+        mb *= 2
+    opt_cfg = _opt_config(cfg)
+    accum = jnp.bfloat16 if opt_cfg.quantize_states else jnp.float32
+    return {"microbatches": mb, "accum_dtype": accum, "opt_cfg": opt_cfg}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               extra_flags: dict | None = None):
+    """Returns (lowered, meta). Separated for the perf-iteration loop.
+
+    ``extra_flags`` (hillclimb knobs): ``cfg_overrides`` (dataclasses.replace
+    on the ArchConfig, e.g. {"pad_heads_to": 48, "q_chunk": 2048}),
+    ``seq_shard``, ``train_policy`` overrides.
+    """
+    cfg = get(arch)
+    if extra_flags and extra_flags.get("cfg_overrides"):
+        import dataclasses as _dc0
+        cfg = _dc0.replace(cfg, **extra_flags["cfg_overrides"])
+    shape = SHAPES[shape_name]
+    ok, why = cell_runnable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pctx = make_parallel_ctx(mesh)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = _sharding_tree(param_specs(params, cfg, pctx), mesh)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "params_b": cfg.param_count() / 1e9,
+            "active_params_b": cfg.active_param_count() / 1e9}
+
+    with mesh:
+        if shape.kind == "train":
+            import dataclasses as _dc
+            # NOTE: seq_shard (Megatron-SP via sharding hints) is OFF by
+            # default — measured as a REGRESSION here: GSPMD drops the
+            # head sharding after the per-layer seq all-gather and
+            # replicates attention (7x flops). See EXPERIMENTS.md SPerf.
+            pctx_t = _dc.replace(
+                pctx,
+                seq_shard=bool((extra_flags or {}).get("seq_shard", False)),
+                gather_weights=bool((extra_flags or {}).get(
+                    "gather_weights", False)))
+            pol = _train_policy(cfg, shape, pctx_t)
+            if extra_flags:
+                pol.update(extra_flags.get("train_policy", {}))
+            opt_cfg = pol["opt_cfg"]
+            opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+            oshard = _sharding_tree(opt_state_specs(opt, params, cfg, pctx),
+                                    mesh)
+            batch = input_specs(cfg, shape, model)
+            bshard = _sharding_tree(batch_specs(cfg, shape, pctx), mesh)
+            step = make_train_step(model, opt_cfg, pctx_t,
+                                   microbatches=pol["microbatches"],
+                                   accum_dtype=pol["accum_dtype"])
+            fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params, opt, batch)
+            meta["opt_quantized"] = opt_cfg.quantize_states
+            meta["microbatches"] = pol["microbatches"]
+            meta["accum_dtype"] = str(pol["accum_dtype"].__name__)
+            meta["seq_shard"] = pctx_t.seq_shard
+        elif shape.kind == "prefill":
+            import dataclasses as _dc
+            pctx_p = _dc.replace(
+                pctx,
+                seq_shard=bool((extra_flags or {}).get("seq_shard", False)),
+                gather_weights=bool((extra_flags or {}).get(
+                    "gather_weights", False)))
+            batch = input_specs(cfg, shape, model)
+            bshard = _sharding_tree(batch_specs(cfg, shape, pctx), mesh)
+
+            def prefill(p, b):
+                return model.prefill(p, b, pctx_p)
+
+            fn = jax.jit(prefill, in_shardings=(pshard, bshard))
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            specs = input_specs(cfg, shape, model)
+            cshard = _sharding_tree(
+                cache_specs(specs["cache"], cfg, shape, pctx), mesh)
+            bshard = _sharding_tree(batch_specs(cfg, shape, pctx), mesh)
+
+            def decode(p, c, b):
+                return model.decode_step(p, c, b, pctx)
+
+            fn = jax.jit(decode, in_shardings=(pshard, cshard, bshard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params, specs["cache"], specs["batch"])
+    return lowered, meta
+
+
+def analyze(lowered, meta: dict, hlo_sink: dict | None = None) -> dict:
+    from repro.roofline.analysis import roofline_from_compiled
+    t0 = time.time()
+    compiled = lowered.compile()
+    if hlo_sink is not None:
+        hlo_sink["hlo"] = compiled.as_text()
+    meta["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    meta["memory"] = {
+        "argument_gb": ma.argument_size_in_bytes / 2 ** 30,
+        "output_gb": ma.output_size_in_bytes / 2 ** 30,
+        "temp_gb": ma.temp_size_in_bytes / 2 ** 30,
+        "alias_gb": ma.alias_size_in_bytes / 2 ** 30,
+        "peak_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                    ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2 ** 30,
+    }
+    meta.update(roofline_from_compiled(compiled, meta))
+    return meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    lowered, meta = lower_cell(arch, shape_name, multi_pod)
+    if lowered is None:
+        return meta
+    return analyze(lowered, meta)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS + ["exanest-lm-100m"])
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = ALL_ARCHS if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all else ([args.shape] if args.shape
+                                            else list(SHAPES))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                cells.append((arch, shp, mp))
+
+    for arch, shp, mp in cells:
+        tag = f"{arch}__{shp}__{'multi' if mp else 'single'}"
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            res = run_cell(arch, shp, mp)
+        except Exception as e:  # noqa: BLE001 — record the failure
+            res = {"arch": arch, "shape": shp,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"  FAILED: {res['error']}", file=sys.stderr)
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+        print(f"  -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state; the dry-run driver
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import and only then builds the mesh.
+
+Axes: single-pod (16, 16) = ("data", "model"); multi-pod (2, 16, 16) =
+("pod", "data", "model"). The "pod" axis is the slow/cross-pod dimension —
+the target of the hierarchical (accelerator-style) collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]
+              ) -> jax.sharding.Mesh:
+    """Arbitrary mesh for tests/examples (e.g. (2,2,2) on 8 host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_parallel_ctx(mesh: jax.sharding.Mesh):
+    from repro.parallel.ctx import ParallelCtx
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ParallelCtx(mesh=mesh, dp_axes=dp, tp_axis="model")

@@ -1,0 +1,3 @@
+from repro.models.transformer import LM, SSMLM, HybridLM, EncDecLM, build_model
+
+__all__ = ["LM", "SSMLM", "HybridLM", "EncDecLM", "build_model"]

@@ -1,0 +1,431 @@
+"""Attention: GQA (+RoPE) and DeepSeek MLA, with chunked-flash lowering.
+
+Three execution paths:
+
+* ``flash_attention`` — double-chunked online-softmax attention in pure jnp
+  (``lax.scan`` over query and KV chunks). This is the default lowering used
+  by the dry-run: memory is bounded by chunk size, so 32k-token prefill
+  compiles without an S x S score tensor. The Pallas TPU kernel in
+  ``repro.kernels.flash_decode`` is the hot-spot implementation for decode.
+* decode attention — one new token against a (possibly sharded) KV cache:
+  plain einsums over the cache; XLA turns the softmax reductions over a
+  sharded sequence axis into the matching collectives.
+* MLA — latent-compressed attention (arXiv:2412.19437): expanded form for
+  train/prefill, *absorbed* form for decode so the cache stays in the
+  compressed (kv_lora + rope) layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import apply_norm, apply_rope, dense_init, dtype_of, init_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- flash (jnp)
+def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
+                    kv_chunk: int = 1024) -> jnp.ndarray:
+    """q: (B,Sq,H,dk); k: (B,Skv,K,dk); v: (B,Skv,K,dv); H % K == 0.
+
+    Double-chunked online-softmax attention with a FlashAttention-style
+    custom VJP: forward saves only (q, k, v, out, lse); backward recomputes
+    probabilities blockwise — without this, scan residuals make a 32k
+    backward cost hundreds of GB of activations."""
+    B, Sq, H, dk = q.shape
+    _, Skv, K, dv = v.shape
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    # pad ragged sequence lengths up to chunk multiples (padded keys are
+    # masked out; padded query rows are dropped at the end)
+    Sq_p = -(-Sq // qc) * qc
+    Skv_p = -(-Skv // kc) * kc
+    kv_valid = Skv
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    out = _flash(q, k, v, causal, qc, kc, kv_valid)
+    return out[:, :Sq]
+
+
+def _block_mask(s, i, j, qc, kc, causal, kv_valid):
+    kpos = j * kc + jnp.arange(kc)
+    if causal:
+        qpos = i * qc + jnp.arange(qc)
+        mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] < kv_valid)
+        return jnp.where(mask[None, None, None], s, NEG_INF)
+    return jnp.where((kpos < kv_valid)[None, None, None, None], s, NEG_INF)
+
+
+def _flash_fwd_impl(q, k, v, causal, qc, kc, kv_valid):
+    B, Sq, H, dk = q.shape
+    _, Skv, K, dv = v.shape
+    rep = H // K
+    nq, nk = Sq // qc, Skv // kc
+    scale = dk ** -0.5
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, K, rep, dk), 1, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, K, dk), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, K, dv), 1, 0)
+
+    def q_step(_, qi):
+        q_i, i = qi
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_j, v_j, j = kj
+            # bf16 operands into the MXU, f32 accumulation (TPU-native)
+            s = jnp.einsum("bqgrh,bkgh->bgrqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = _block_mask(s, i, j, qc, kc, causal, kv_valid)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(q_i.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, rep, qc), jnp.float32)
+        a0 = jnp.zeros((B, K, rep, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kr, vr, jnp.arange(nk)))
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse_i = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out_i.astype(q.dtype), lse_i)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))
+    # outs: (nq, B, K, rep, qc, dv) -> (B, Sq, H, dv)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    out = out.reshape(B, Sq, H, dv)
+    # lse: (nq, B, K, rep, qc) -> (B, K, rep, Sq)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, K, rep, Sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, qc, kc, kv_valid):
+    return _flash_fwd_impl(q, k, v, causal, qc, kc, kv_valid)[0]
+
+
+def _flash_fwd(q, k, v, causal, qc, kc, kv_valid):
+    out, lse = _flash_fwd_impl(q, k, v, causal, qc, kc, kv_valid)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, qc, kc, kv_valid, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, dk = q.shape
+    _, Skv, K, dv = v.shape
+    rep = H // K
+    nq, nk = Sq // qc, Skv // kc
+    scale = dk ** -0.5
+    # D = rowsum(dout * out): (B, K, rep, Sq)
+    D = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    D = jnp.moveaxis(D.reshape(B, Sq, K, rep), 1, 3)         # (B,K,rep,Sq)
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, K, rep, dk), 1, 0)
+    dor = jnp.moveaxis(dout.reshape(B, nq, qc, K, rep, dv), 1, 0)
+    Dr = jnp.moveaxis(D.reshape(B, K, rep, nq, qc), 3, 0)    # (nq,B,K,rep,qc)
+    lser = jnp.moveaxis(lse.reshape(B, K, rep, nq, qc), 3, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, K, dk), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, K, dv), 1, 0)
+
+    def kv_step(dq_acc, kj):
+        k_j, v_j, j = kj
+
+        def q_step(carry, qi):
+            dk_j, dv_j = carry
+            q_i, do_i, D_i, lse_i, i = qi
+            s = jnp.einsum("bqgrh,bkgh->bgrqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = _block_mask(s, i, j, qc, kc, causal, kv_valid)
+            p = jnp.exp(s - lse_i[..., None])                # (B,K,rep,qc,kc)
+            p_c = p.astype(q_i.dtype)
+            dv_j += jnp.einsum("bgrqk,bqgrd->bkgd", p_c, do_i,
+                               preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqgrd,bkgd->bgrqk", do_i, v_j,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_i[..., None]) * scale
+            ds_c = ds.astype(q_i.dtype)
+            dk_j += jnp.einsum("bgrqk,bqgrh->bkgh", ds_c, q_i,
+                               preferred_element_type=jnp.float32)
+            dq_i = jnp.einsum("bgrqk,bkgh->bqgrh", ds_c, k_j,
+                              preferred_element_type=jnp.float32)
+            return (dk_j, dv_j), dq_i
+
+        zk = jnp.zeros((B, kc, K, dk), jnp.float32)
+        zv = jnp.zeros((B, kc, K, dv), jnp.float32)
+        (dk_j, dv_j), dq_parts = jax.lax.scan(
+            q_step, (zk, zv), (qr, dor, Dr, lser, jnp.arange(nq)))
+        return dq_acc + dq_parts, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, qc, K, rep, dk), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0,
+                                  (kr, vr, jnp.arange(nk)))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, Sq, H, dk).astype(q.dtype)
+    dk_ = jnp.moveaxis(dks, 0, 1).reshape(B, Skv, K, dk).astype(k.dtype)
+    dv_ = jnp.moveaxis(dvs, 0, 1).reshape(B, Skv, K, dv).astype(v.dtype)
+    return dq, dk_, dv_
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _pos_vec(pos, B):
+    """Normalize a scalar or (B,) position into a (B,) int32 vector."""
+    p = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_1d(p), (B,))
+
+
+def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
+    """q: (B,1,H,dk); caches: (B,S,K,d*); attend to positions <= pos
+    (scalar or per-row vector — continuous batching uses per-slot pos)."""
+    B, _, H, dk = q.shape
+    _, S, K, dv = v_cache.shape
+    rep = H // K
+    qg = q.reshape(B, K, rep, dk).astype(jnp.float32)
+    s = jnp.einsum("bgrh,bkgh->bgrk", qg, k_cache.astype(jnp.float32))
+    s = s * (dk ** -0.5)
+    mask = jnp.arange(S)[None, :] <= _pos_vec(pos, B)[:, None]  # (B,S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dv).astype(q.dtype)
+
+
+
+def _qkv_hint(t, pctx):
+    """Constrain (B, S, H, hd) attention tensors: batch over DP, heads over
+    TP (when divisible). Like the residual-stream hint, this pins the
+    sharding of the flash scan xs/carries — without it GSPMD replicates the
+    head dim inside the while loops (measured: no win from head padding
+    until this hint exists)."""
+    if pctx is None:
+        return t
+    import math
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = math.prod(pctx.mesh.shape[a] for a in pctx.dp_axes)
+    b_ax = pctx.dp_axes if t.shape[0] % dp == 0 else None
+    tp_n = pctx.mesh.shape[pctx.tp_axis]
+    h_ax = pctx.tp_axis if t.shape[2] % tp_n == 0 else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(pctx.mesh, P(b_ax, None, h_ax, None)))
+
+
+# ------------------------------------------------------------------------ GQA
+def _padded_heads(cfg: ArchConfig) -> int:
+    if cfg.pad_heads_to is not None and cfg.pad_heads_to > cfg.n_heads:
+        return cfg.pad_heads_to
+    return cfg.n_heads
+
+
+def init_gqa(key, cfg: ArchConfig, d: int) -> dict:
+    dt = dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    Hp = _padded_heads(cfg)
+    ks = jax.random.split(key, 4)
+    wq = dense_init(ks[0], (d, Hp, hd), dt, scale=d ** -0.5)
+    wo = dense_init(ks[3], (Hp, hd, d), dt, scale=(Hp * hd) ** -0.5)
+    if Hp != cfg.n_heads:
+        # zero the padding heads; gqa outputs are additionally head-masked,
+        # so training keeps them at zero (bit-exact vs the unpadded arch)
+        wq = wq.at[:, cfg.n_heads:, :].set(0)
+        wo = wo.at[cfg.n_heads:].set(0)
+    p = {
+        "wq": wq,
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, hd), dt, scale=d ** -0.5),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, hd), dt, scale=d ** -0.5),
+        "wo": wo,
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((Hp, hd), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+    return p
+
+
+def _head_mask(cfg: ArchConfig, out):
+    Hp = _padded_heads(cfg)
+    if Hp == cfg.n_heads:
+        return out
+    mask = (jnp.arange(Hp) < cfg.n_heads).astype(out.dtype)
+    return out * mask[None, None, :, None]
+
+
+def gqa_qkv(p: dict, x: jnp.ndarray, cfg: ArchConfig, positions) -> tuple:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(p: dict, x: jnp.ndarray, cfg: ArchConfig, *, positions,
+                  causal: bool = True, pctx=None) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence (train/prefill) GQA. Returns (out, cache).
+
+    When q heads shard over TP but kv heads do not, flash's (K, rep) head
+    grouping would break the sharding (e.g. 48 -> (4,12) has no 16-way
+    split): repeat KV to MHA so every head tensor shards cleanly — the
+    repeated-KV bytes are TP-sharded, so per-chip KV actually shrinks."""
+    tp = pctx.mesh.shape[pctx.tp_axis] if pctx is not None else 1
+    q, k, v = gqa_qkv(p, x, cfg, positions)
+    Hp = q.shape[2]
+    K = k.shape[2]
+    mha_ize = (Hp % K != 0) or (tp > 1 and Hp % tp == 0 and K % tp != 0)
+    if mha_ize:
+        k = jnp.repeat(k, -(-Hp // K), axis=2)[:, :, :Hp]
+        v = jnp.repeat(v, -(-Hp // K), axis=2)[:, :, :Hp]
+    q, k, v = (_qkv_hint(t, pctx) for t in (q, k, v))
+    out = flash_attention(q, k, v, causal=causal,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = _head_mask(cfg, out)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict,
+               pos) -> tuple[jnp.ndarray, dict]:
+    """x: (B,1,d); cache k/v: (B,S,K,hd); writes the new KV at ``pos``
+    (scalar or per-row (B,) for slot-based continuous batching)."""
+    B = x.shape[0]
+    pos_b = _pos_vec(pos, B)
+    q, k_new, v_new = gqa_qkv(p, x, cfg, pos_b[:, None])
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, pos_b].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, pos_b].set(v_new[:, 0].astype(cache["v"].dtype))
+    Hp = q.shape[2]
+    ka, va = k, v
+    if Hp % k.shape[2] != 0:
+        ka = jnp.repeat(k, -(-Hp // k.shape[2]), axis=2)[:, :, :Hp]
+        va = jnp.repeat(v, -(-Hp // v.shape[2]), axis=2)[:, :, :Hp]
+    out = decode_attention(q, ka, va, pos_b)
+    out = _head_mask(cfg, out)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+# ------------------------------------------------------- cross attention (whisper)
+def init_cross_attention(key, cfg: ArchConfig, d: int) -> dict:
+    return init_gqa(key, cfg, d)
+
+
+def cross_attention(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                    kv: tuple[jnp.ndarray, jnp.ndarray]) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.attn_bias:
+        q = q + p["bq"]
+    k, v = kv
+    out = flash_attention(q, k, v, causal=False,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_kv(p: dict, enc: jnp.ndarray, cfg: ArchConfig) -> tuple:
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    if cfg.attn_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+# ------------------------------------------------------------------------ MLA
+def init_mla(key, cfg: ArchConfig, d: int) -> dict:
+    m = cfg.mla
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dt),
+        "q_norm": init_norm(cfg, m.q_lora_rank),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, cfg.n_heads, qk), dt),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_norm": init_norm(cfg, m.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank, cfg.n_heads,
+                                    m.qk_nope_head_dim + m.v_head_dim), dt),
+        "wo": dense_init(ks[4], (cfg.n_heads, m.v_head_dim, d), dt,
+                         scale=(cfg.n_heads * m.v_head_dim) ** -0.5),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    q_lat = apply_norm(p["q_norm"], x @ p["wq_a"], cfg)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    m = cfg.mla
+    kv = x @ p["wkv_a"]
+    c_kv = apply_norm(p["kv_norm"], kv[..., :m.kv_lora_rank], cfg)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)  # (B,S,1,rope)
+    return c_kv, k_rope
+
+
+def mla_attention(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+                  positions, pctx=None) -> tuple[jnp.ndarray, dict]:
+    """Expanded-form MLA for train/prefill; cache stays compressed."""
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+    k_nope = kv[..., :m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, k_nope.shape[:3] +
+                                          (m.qk_rope_head_dim,))], axis=-1)
+    q, k, v = (_qkv_hint(t, pctx) for t in (q, k, v))
+    out = flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+
+
+def mla_decode(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict,
+               pos) -> tuple[jnp.ndarray, dict]:
+    """Absorbed-form decode: the per-token cache is (kv_lora + rope) wide,
+    so a 32k cache is ~576 values/token instead of H*(192+128)."""
+    m = cfg.mla
+    B = x.shape[0]
+    pos_b = _pos_vec(pos, B)
+    positions = pos_b[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)          # (B,1,H,*)
+    c_new, kr_new = _mla_latent(p, x, cfg, positions)
+    rows = jnp.arange(B)
+    c_kv = cache["c_kv"].at[rows, pos_b].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[rows, pos_b].set(
+        kr_new[:, 0, 0, :].astype(cache["k_rope"].dtype))
+    w_uk = p["wkv_b"][..., :m.qk_nope_head_dim]            # (r,H,nope)
+    w_uv = p["wkv_b"][..., m.qk_nope_head_dim:]            # (r,H,v)
+    # absorb W_UK into q: q_c (B,H,r)
+    q_c = jnp.einsum("bshk,rhk->bhr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    s = jnp.einsum("bhr,bkr->bhk", q_c, c_kv.astype(jnp.float32))
+    s += jnp.einsum("bshk,bmk->bhm", q_rope.astype(jnp.float32),
+                    k_rope.astype(jnp.float32))
+    s *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    mask = jnp.arange(c_kv.shape[1])[None, :] <= pos_b[:, None]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhk,bkr->bhr", pr, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", o_c, w_uv.astype(jnp.float32))
+    out = jnp.einsum("bhv,hvd->bd", o.astype(x.dtype), p["wo"])[:, None, :]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

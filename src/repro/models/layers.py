@@ -1,0 +1,167 @@
+"""Core layers: norms, RoPE, MLPs, embeddings — pure functions over pytrees.
+
+Parameters are nested dicts of ``jnp.ndarray``; init functions mirror apply
+functions. Everything is ``jax.eval_shape``-safe so the dry-run can build
+full-size parameter ShapeDtypeStructs without allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------- init utils
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------- norms
+def init_norm(cfg: ArchConfig, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rmsnorm_gated(scale: jnp.ndarray, x: jnp.ndarray, gate: jnp.ndarray) -> jnp.ndarray:
+    """Mamba-2 gated RMSNorm: norm(x * silu(gate)) * scale."""
+    xf = (x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ MLP
+def init_mlp(key, cfg: ArchConfig, d: int, ff: int) -> dict:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_out": dense_init(ks[2], (ff, d), dt)}
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(ks[0], (d, ff), dt)
+        p["w_up"] = dense_init(ks[1], (d, ff), dt)
+    else:
+        p["w_up"] = dense_init(ks[1], (d, ff), dt)
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((ff,), dt)
+        p["b_out"] = jnp.zeros((d,), dt)
+    return p
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    up = x @ p["w_up"]
+    if cfg.mlp_bias:
+        up = up + p["b_up"]
+    if cfg.mlp_gated:
+        h = act(x @ p["w_gate"]) * up
+    else:
+        h = act(up)
+    out = h @ p["w_out"]
+    if cfg.mlp_bias:
+        out = out + p["b_out"]
+    return out
+
+
+# ----------------------------------------------------------------- embeddings
+def init_embedding(key, cfg: ArchConfig) -> dict:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"tokens": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.pos_embedding == "learned":
+        # sized generously so the assigned decode shapes lower mechanically
+        p["positions"] = dense_init(ks[2], (32768 + 8, cfg.d_model), dt, scale=0.02)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    return jnp.take(p["tokens"], tokens, axis=0)
+
+
+def logits(p: dict, h: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    w = p["tokens"].T if cfg.tie_embeddings else p["head"]
+    return (h @ w).astype(jnp.float32)
+
+
+def softmax_xent(logits_: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Stable cross entropy; logits (..., V) f32, labels int (...)."""
+    m = jnp.max(logits_, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits_ - m), axis=-1))
+    gold = jnp.take_along_axis(logits_, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def lm_loss(p: dict, h: jnp.ndarray, targets: jnp.ndarray, cfg: ArchConfig,
+            *, chunk: int = 1024) -> jnp.ndarray:
+    """Mean next-token cross entropy with the head projection fused inside a
+    sequence-chunk scan, so the (B, S, V) logits tensor is never
+    materialized (V up to 256k at S=4096 would be ~GBs of f32 per device).
+
+    h: (B, T, d) hidden states aligned with ``targets`` (B, T) — caller has
+    already applied the shift. Pads T to a chunk multiple internally.
+    """
+    w = p["tokens"].T if cfg.tie_embeddings else p["head"]
+    B, T, d = h.shape
+    # adaptive chunk: cap the transient (B, c, V) f32 logits at ~1 GB
+    # (matters for replicated vocabs: 151k x f32 x B is ~10 GB at c=1024)
+    c = max(64, min(chunk, (1 << 30) // max(1, cfg.vocab_size * 4 * B)))
+    c = min(c, T)
+    Tp = -(-T // c) * c
+    if Tp != T:
+        h = jnp.pad(h, ((0, 0), (0, Tp - T), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, Tp - T)),
+                          constant_values=-1)
+    hr = jnp.moveaxis(h.reshape(B, Tp // c, c, d), 1, 0)
+    tr = jnp.moveaxis(targets.reshape(B, Tp // c, c), 1, 0)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        hc, tc = xs
+        lg = (hc @ w).astype(jnp.float32)
+        valid = tc >= 0
+        ls = softmax_xent(lg, jnp.maximum(tc, 0))
+        return (carry[0] + jnp.sum(jnp.where(valid, ls, 0.0)),
+                carry[1] + jnp.sum(valid)), None
+
+    (tot, n), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+                               (hr, tr))
+    return tot / jnp.maximum(n, 1)

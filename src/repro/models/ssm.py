@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Train/prefill uses the chunked dual form: quadratic attention-like math
+inside each chunk (MXU-friendly (c x c) blocks) plus a linear recurrence
+over chunk states. Decode is the O(1)-state recurrent update — the reason
+mamba2/zamba2 run the ``long_500k`` shape that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import dense_init, dtype_of, rmsnorm_gated
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_ch
+
+
+def init_mamba2(key, cfg: ArchConfig) -> dict:
+    """The canonical fused ``in_proj`` is split into per-role projections
+    (z/x/B/C/dt) — a pure column partition of the same matrix — so each
+    output dim shards cleanly on the TP mesh axis instead of slicing across
+    shard boundaries (see parallel/sharding.py)."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 9)
+    return {
+        "wz": dense_init(ks[0], (d, d_in), dt),
+        "wx": dense_init(ks[1], (d, d_in), dt),
+        "wB": dense_init(ks[2], (d, gn), dt),
+        "wC": dense_init(ks[3], (d, gn), dt),
+        "wdt": dense_init(ks[4], (d, nh), dt),
+        "conv_x": dense_init(ks[5], (s.d_conv, d_in), dt, scale=0.3),
+        "conv_B": dense_init(ks[6], (s.d_conv, gn), dt, scale=0.3),
+        "conv_C": dense_init(ks[7], (s.d_conv, gn), dt, scale=0.3),
+        "conv_bx": jnp.zeros((d_in,), dt),
+        "conv_bB": jnp.zeros((gn,), dt),
+        "conv_bC": jnp.zeros((gn,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[8], (d_in, d), dt),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b, prev=None):
+    """Depthwise causal conv along seq. xBC: (B,L,C); conv_w: (W,C).
+    ``prev``: (B,W-1,C) left context (decode/streaming)."""
+    W = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+    xp = jnp.concatenate([prev, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(W))
+    return jax.nn.silu(out + conv_b), xp[:, -(W - 1):]
+
+
+def _project(p, x, cfg, conv_prev=None):
+    """Input projections + causal depthwise convs on x/B/C (§4 of the
+    Mamba-2 paper: conv on the xBC block). Returns (z, xi, B, C, dt_raw,
+    conv_state)."""
+    z = x @ p["wz"]
+    xc = x @ p["wx"]
+    Bc = x @ p["wB"]
+    Cc = x @ p["wC"]
+    dtr = x @ p["wdt"]
+    prev = (None, None, None) if conv_prev is None else conv_prev
+    xc, sx = _causal_conv(xc, p["conv_x"], p["conv_bx"], prev[0])
+    Bc, sB = _causal_conv(Bc, p["conv_B"], p["conv_bB"], prev[1])
+    Cc, sC = _causal_conv(Cc, p["conv_C"], p["conv_bC"], prev[2])
+    return z, xc, Bc, Cc, dtr, (sx, sB, sC)
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) with out[i, j] = sum_{k=j+1..i} x[k] for
+    j <= i (0 on the diagonal), -inf above the diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD dual form.
+
+    x: (b,l,h,p) inputs; dt: (b,l,h) f32 (post-softplus); A: (h,) f32 (<0);
+    B, C: (b,l,g,n). Returns (y: (b,l,h,p), final_state: (b,h,p,n))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    l_orig = l
+    if l % chunk != 0:
+        # pad with dt=0 steps: dA=0 (no decay) and no input contribution,
+        # so the final state is exact and padded outputs are dropped.
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l += pad
+    nc = l // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    dA = dtc * A  # (b,nc,c,h)
+
+    # within-chunk (quadratic) term
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))        # (b,nc,h,c,c)
+    CB = jnp.einsum("bzcgn,bzsgn->bzgcs", Cc, Bc,
+                    preferred_element_type=jnp.float32)   # (b,nc,g,c,s)
+    if rep > 1:
+        CB = jnp.repeat(CB, rep, axis=2)                  # (b,nc,h,c,s)
+    M = CB * jnp.where(jnp.isfinite(L), L, 0.0)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+    y_diag = jnp.einsum("bzhcs,bzshp->bzchp", M.astype(x.dtype),
+                        xdt.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+
+    # chunk states
+    dA_cum = jnp.cumsum(dA, axis=2)                       # (b,nc,c,h)
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum) # (b,nc,c,h)
+    states = jnp.einsum("bzcgn,bzch,bzchp->bzhpn",
+                        Bc.astype(x.dtype), decay_states.astype(x.dtype),
+                        xdt.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])            # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (b,nc,h,p,n)
+
+    # contribution of the entering state to each position
+    state_decay = jnp.exp(dA_cum)                         # (b,nc,c,h)
+    y_off = jnp.einsum("bzcgn,bzch,bzhpn->bzchp",
+                       Cc.astype(x.dtype), state_decay.astype(x.dtype),
+                       prev_states.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y[:, :l_orig], final
+
+
+def mamba2_forward(p: dict, x: jnp.ndarray, cfg: ArchConfig
+                   ) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence SSD. x: (B,L,d). Returns (y, state) where state =
+    {conv: (B,W-1,C), ssm: (B,h,p,n)} for streaming continuation."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    z, xc, Bc, Cc, dtr, conv_state = _project(p, x, cfg)
+    xi = xc.reshape(x.shape[0], x.shape[1], nh, s.head_dim)
+    B_ = Bc.reshape(x.shape[0], x.shape[1], s.n_groups, s.d_state)
+    C_ = Cc.reshape(x.shape[0], x.shape[1], s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_chunked(xi, dt, A, B_, C_, s.chunk)
+    y = y + xi.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
+    y = rmsnorm_gated(p["norm_scale"], y, z)
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, cfg: ArchConfig, state: dict
+                  ) -> tuple[jnp.ndarray, dict]:
+    """Single-token recurrent update. x: (B,1,d)."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    B1 = x.shape[0]
+    z, xc, Bc, Cc, dtr, conv_state = _project(p, x, cfg,
+                                              conv_prev=state["conv"])
+    xi = xc.reshape(B1, nh, s.head_dim)
+    B_ = Bc.reshape(B1, s.n_groups, s.d_state)
+    C_ = Cc.reshape(B1, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    B_ = jnp.repeat(B_, rep, axis=1)   # (B,h,n)
+    C_ = jnp.repeat(C_, rep, axis=1)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                   # (B,h)
+    xdt = xi.astype(jnp.float32) * dt[..., None]           # (B,h,p)
+    new_state = state["ssm"] * dA[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhpn", B_.astype(jnp.float32), xdt)
+    y = jnp.einsum("bhn,bhpn->bhp", C_.astype(jnp.float32), new_state)
+    y = y + xi.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B1, 1, d_in).astype(x.dtype)
+    y = rmsnorm_gated(p["norm_scale"], y, z)
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": new_state}

@@ -1,0 +1,642 @@
+"""Unified model definitions for the 10 assigned architectures.
+
+Families:
+* ``LM``        — decoder-only dense / MoE / VLM (stub patch frontend);
+                  optional MLA attention and DeepSeek-V3 MTP head.
+* ``SSMLM``     — Mamba-2 (attention-free).
+* ``HybridLM``  — Zamba2-style: Mamba-2 stack with a single *shared*
+                  attention+MLP block applied every ``hybrid_attn_every``
+                  layers (one weight copy, several KV caches).
+* ``EncDecLM``  — Whisper-style encoder-decoder with a stub conv frontend
+                  (``frames`` arrive as precomputed embeddings per the
+                  assignment spec).
+
+All stacks scan over stacked layer parameters (compact HLO at 61+ layers)
+with ``jax.checkpoint`` on the block body (remat).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_mlp, apply_norm, dtype_of,
+                                 embed_tokens, init_embedding, init_mlp,
+                                 init_norm, lm_loss, logits, softmax_xent)
+
+
+def _hint(x, pctx):
+    """Sharding constraint on residual-stream activations (B, S, d).
+
+    * batch over the DP axes — keeps scan/while carries DP-sharded (without
+      it GSPMD may replicate the batch inside loop bodies: observed 16x
+      flops/memory on the 16x16 mesh);
+    * optionally (pctx.seq_shard) sequence over the TP axis — Megatron-style
+      sequence parallelism: remat-saved layer inputs shrink by the TP size
+      at the cost of one all-gather per layer entry."""
+    if pctx is None:
+        return x
+    import math
+    dp = math.prod(pctx.mesh.shape[a] for a in pctx.dp_axes)
+    if x.shape[0] % dp != 0:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    seq_ax = None
+    if (pctx.seq_shard and x.ndim >= 3
+            and x.shape[1] % pctx.mesh.shape[pctx.tp_axis] == 0
+            and x.shape[1] > 1):
+        seq_ax = pctx.tp_axis
+    spec = P(pctx.dp_axes, seq_ax, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, spec))
+
+
+# ------------------------------------------------------------------ blocks
+def init_block(key, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {}
+    if kind in ("dense", "moe", "encoder", "decoder"):
+        p["ln1"] = init_norm(cfg, d)
+        p["attn"] = (attn.init_mla(ks[0], cfg, d) if cfg.mla is not None
+                     else attn.init_gqa(ks[0], cfg, d))
+        p["ln2"] = init_norm(cfg, d)
+        if kind == "moe":
+            p["ffn"] = moe_lib.init_moe(ks[1], cfg, d)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg, d, cfg.d_ff)
+        if kind == "decoder":
+            p["ln_x"] = init_norm(cfg, d)
+            p["xattn"] = attn.init_cross_attention(ks[2], cfg, d)
+    elif kind == "ssm":
+        p["ln1"] = init_norm(cfg, d)
+        p["ssm"] = ssm_lib.init_mamba2(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _ffn(p, h, cfg, kind, pctx):
+    if kind == "moe":
+        return moe_lib.apply_moe(p["ffn"], h, cfg, pctx)
+    return apply_mlp(p["ffn"], h, cfg)
+
+
+def _unfsdp(p: dict, cfg, pctx, kind: str):
+    """ZeRO-3 semantics for the dense weights of one layer: constrain them
+    to be replicated over the FSDP ('data') axis inside the scan body, so
+    GSPMD all-gathers the weight shards (0.1-1 GB/layer) instead of
+    psum-ing full activations over 'data' (measured: 1.9 TB/step/device of
+    activation all-reduce on deepseek-v3 without this). Expert weights are
+    excluded — their EP layout is consumed directly by shard_map."""
+    if pctx is None or not pctx.gather_weights \
+            or "data" not in pctx.mesh.axis_names:
+        return p
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel.sharding import param_specs
+
+    def strip(spec):
+        parts = []
+        for ax in tuple(spec):
+            if ax == "data":
+                parts.append(None)
+            elif isinstance(ax, (tuple, list)):
+                kept = tuple(a for a in ax if a != "data")
+                parts.append(kept if kept else None)
+            else:
+                parts.append(ax)
+        return P(*parts)
+
+    specs = param_specs(p, cfg, pctx)
+
+    def one(path, leaf, spec):
+        if leaf.ndim == 3 and leaf.shape[0] == (cfg.moe.n_experts
+                                                if cfg.moe else -1):
+            return leaf  # EP expert stacks stay in shard_map layout
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(pctx.mesh, strip(spec)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, l, s: one(path, l, s), p, specs)
+
+
+def block_forward(p: dict, x, cfg: ArchConfig, kind: str, *, positions,
+                  pctx=None, causal=True, cross=None):
+    """Full-sequence block. Returns (x, cache)."""
+    p = _unfsdp(p, cfg, pctx, kind)
+    x = _hint(x, pctx)
+    h = apply_norm(p["ln1"], x, cfg)
+    if kind == "ssm":
+        y, state = ssm_lib.mamba2_forward(p["ssm"], h, cfg)
+        return _hint(x + y, pctx), state
+    if cfg.mla is not None:
+        y, cache = attn.mla_attention(p["attn"], h, cfg, positions=positions,
+                                      pctx=pctx)
+    else:
+        y, cache = attn.gqa_attention(p["attn"], h, cfg, positions=positions,
+                                      causal=causal, pctx=pctx)
+    x = x + y
+    if kind == "decoder":
+        hx = apply_norm(p["ln_x"], x, cfg)
+        kv = attn.cross_kv(p["xattn"], cross, cfg)
+        x = x + attn.cross_attention(p["xattn"], hx, cfg, kv)
+    h2 = apply_norm(p["ln2"], x, cfg)
+    x = x + _ffn(p, h2, cfg, kind, pctx)
+    # exit hint: the scan carry (== the remat-saved layer input of the NEXT
+    # block) keeps the (dp[, seq-sharded]) layout
+    return _hint(x, pctx), cache
+
+
+def block_decode(p: dict, x, cfg: ArchConfig, kind: str, *, cache, pos,
+                 pctx=None, cross_kv=None):
+    x = _hint(x, pctx)
+    h = apply_norm(p["ln1"], x, cfg)
+    if kind == "ssm":
+        y, state = ssm_lib.mamba2_decode(p["ssm"], h, cfg, cache)
+        return x + y, state
+    if cfg.mla is not None:
+        y, cache = attn.mla_decode(p["attn"], h, cfg, cache, pos)
+    else:
+        y, cache = attn.gqa_decode(p["attn"], h, cfg, cache, pos)
+    x = x + y
+    if kind == "decoder":
+        hx = apply_norm(p["ln_x"], x, cfg)
+        q = jnp.einsum("bsd,dhk->bshk", hx, p["xattn"]["wq"])
+        if cfg.attn_bias:
+            q = q + p["xattn"]["bq"]
+        o = attn.decode_attention(q, cross_kv[0], cross_kv[1],
+                                  cross_kv[0].shape[1] - 1)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["xattn"]["wo"])
+    h2 = apply_norm(p["ln2"], x, cfg)
+    x = x + _ffn(p, h2, cfg, kind, pctx)
+    return x, cache
+
+
+# ------------------------------------------------------------ stacked scans
+def init_stack(key, cfg: ArchConfig, kind: str, n: int):
+    if n == 0:
+        return None
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_block(k, cfg, kind))(keys)
+
+
+def stack_forward(stack, x, cfg, kind, *, positions, pctx=None, causal=True,
+                  cross=None):
+    """Scan a stacked block over the layer dimension; returns (x, caches)."""
+    body = functools.partial(block_forward, cfg=cfg, kind=kind,
+                             positions=positions, pctx=pctx, causal=causal,
+                             cross=cross)
+
+    def step(carry, layer_p):
+        out, cache = jax.checkpoint(
+            lambda c, lp: body(lp, c))(carry, layer_p)
+        return out, cache
+
+    return jax.lax.scan(step, x, stack)
+
+
+def stack_decode(stack, x, cfg, kind, *, caches, pos, pctx=None,
+                 cross_kv=None):
+    def step(carry, xs):
+        layer_p, cache, ck = xs
+        out, new_cache = block_decode(layer_p, carry, cfg, kind, cache=cache,
+                                      pos=pos, pctx=pctx, cross_kv=ck)
+        return out, new_cache
+
+    if cross_kv is None:
+        n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+        cross_kv = (jnp.zeros((n,)),) * 2  # unused placeholder, scanned over
+    return jax.lax.scan(step, x, (stack, caches, cross_kv))
+
+
+# ------------------------------------------------------------------ LM model
+@dataclasses.dataclass(frozen=True)
+class LM:
+    """Decoder-only LM: dense, MoE (w/ optional MLA + MTP), VLM."""
+    cfg: ArchConfig
+
+    # -------- init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        n_dense = cfg.n_layers if cfg.moe is None else cfg.n_dense_layers
+        n_moe = 0 if cfg.moe is None else cfg.n_layers - cfg.n_dense_layers
+        p = {
+            "embed": init_embedding(ks[0], cfg),
+            "dense_stack": init_stack(ks[1], cfg, "dense", n_dense),
+            "moe_stack": init_stack(ks[2], cfg, "moe", n_moe),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+        if cfg.mtp_depth:
+            from repro.models.layers import dense_init
+            p["mtp"] = {
+                "proj": dense_init(ks[3], (2 * cfg.d_model, cfg.d_model),
+                                   dtype_of(cfg)),
+                "block": init_block(ks[4], cfg,
+                                    "moe" if cfg.moe is not None else "dense"),
+                "ln_h": init_norm(cfg, cfg.d_model),
+                "ln_e": init_norm(cfg, cfg.d_model),
+            }
+        return p
+
+    # -------- shared trunk
+    def _inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        if cfg.vision is not None:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        if cfg.pos_embedding == "learned":
+            x = x + jnp.take(params["embed"]["positions"],
+                             jnp.arange(S), axis=0)
+        return x, positions
+
+    def _trunk(self, params, x, positions, pctx):
+        cfg = self.cfg
+        caches = {}
+        if params["dense_stack"] is not None:
+            x, caches["dense"] = stack_forward(
+                params["dense_stack"], x, cfg, "dense", positions=positions,
+                pctx=pctx)
+        if params["moe_stack"] is not None:
+            x, caches["moe"] = stack_forward(
+                params["moe_stack"], x, cfg, "moe", positions=positions,
+                pctx=pctx)
+        return apply_norm(params["final_norm"], x, cfg), caches
+
+    # -------- train
+    def loss_fn(self, params, batch, pctx=None):
+        cfg = self.cfg
+        x, positions = self._inputs(params, batch)
+        h, _ = self._trunk(params, x, positions, pctx)
+        if cfg.vision is not None:
+            h = h[:, cfg.vision.n_patches:, :]
+        labels = batch["labels"]
+        total = lm_loss(params["embed"], h[:, :-1], labels[:, 1:], cfg)
+        if cfg.mtp_depth:
+            total = total + 0.3 * self._mtp_loss(params, h, batch, pctx)
+        return total
+
+    def _mtp_loss(self, params, h, batch, pctx):
+        """DeepSeek-V3 MTP (depth 1): predict token t+2 from h_t combined
+        with the embedding of token t+1."""
+        cfg = self.cfg
+        mtp = params["mtp"]
+        if cfg.vision is not None:
+            h = h[:, cfg.vision.n_patches:, :]
+        tok = batch["tokens"]
+        e_next = embed_tokens(params["embed"], tok[:, 1:], cfg)
+        hh = apply_norm(mtp["ln_h"], h[:, :-1], cfg)
+        ee = apply_norm(mtp["ln_e"], e_next, cfg)
+        z = jnp.concatenate([hh, ee], axis=-1) @ mtp["proj"]
+        B, S = z.shape[0], z.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        z, _ = block_forward(mtp["block"], z, cfg,
+                             "moe" if cfg.moe is not None else "dense",
+                             positions=positions, pctx=pctx)
+        labels = batch["labels"]
+        return lm_loss(params["embed"], z[:, :-1], labels[:, 2:], cfg)
+
+    # -------- serving
+    def prefill(self, params, batch, pctx=None):
+        cfg = self.cfg
+        x, positions = self._inputs(params, batch)
+        h, caches = self._trunk(params, x, positions, pctx)
+        lg = logits(params["embed"], h[:, -1:, :], cfg)
+        return lg, caches
+
+    def decode_step(self, params, caches, batch, pctx=None):
+        cfg = self.cfg
+        tok = batch["token"][:, None]
+        pos = batch["pos"]
+        x = embed_tokens(params["embed"], tok, cfg)
+        if cfg.pos_embedding == "learned":
+            pos_b = jnp.broadcast_to(jnp.atleast_1d(
+                jnp.asarray(pos, jnp.int32)), (x.shape[0],))
+            x = x + jnp.take(params["embed"]["positions"], pos_b,
+                             axis=0)[:, None, :]
+        new_caches = {}
+        if params["dense_stack"] is not None:
+            x, new_caches["dense"] = stack_decode(
+                params["dense_stack"], x, cfg, "dense",
+                caches=caches["dense"], pos=pos, pctx=pctx)
+        if params["moe_stack"] is not None:
+            x, new_caches["moe"] = stack_decode(
+                params["moe_stack"], x, cfg, "moe", caches=caches["moe"],
+                pos=pos, pctx=pctx)
+        h = apply_norm(params["final_norm"], x, cfg)
+        lg = logits(params["embed"], h, cfg)
+        return lg, new_caches
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        """Zero KV caches shaped for a ``seq_len`` window."""
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        n_dense = cfg.n_layers if cfg.moe is None else cfg.n_dense_layers
+        n_moe = 0 if cfg.moe is None else cfg.n_layers - cfg.n_dense_layers
+
+        def kv(n):
+            if n == 0:
+                return None
+            if cfg.mla is not None:
+                m = cfg.mla
+                return {"c_kv": jnp.zeros((n, batch_size, seq_len,
+                                           m.kv_lora_rank), dt),
+                        "k_rope": jnp.zeros((n, batch_size, seq_len,
+                                             m.qk_rope_head_dim), dt)}
+            hd = cfg.resolved_head_dim
+            return {"k": jnp.zeros((n, batch_size, seq_len, cfg.n_kv_heads,
+                                    hd), dt),
+                    "v": jnp.zeros((n, batch_size, seq_len, cfg.n_kv_heads,
+                                    hd), dt)}
+
+        out = {}
+        if n_dense:
+            out["dense"] = kv(n_dense)
+        if n_moe:
+            out["moe"] = kv(n_moe)
+        return out
+
+
+# ------------------------------------------------------------------ SSM model
+@dataclasses.dataclass(frozen=True)
+class SSMLM:
+    cfg: ArchConfig
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        return {
+            "embed": init_embedding(ks[0], cfg),
+            "stack": init_stack(ks[1], cfg, "ssm", cfg.n_layers),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+
+    def loss_fn(self, params, batch, pctx=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, _ = stack_forward(params["stack"], x, cfg, "ssm",
+                             positions=positions, pctx=pctx)
+        h = apply_norm(params["final_norm"], x, cfg)
+        return lm_loss(params["embed"], h[:, :-1], batch["labels"][:, 1:],
+                       cfg)
+
+    def prefill(self, params, batch, pctx=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, states = stack_forward(params["stack"], x, cfg, "ssm",
+                                  positions=positions, pctx=pctx)
+        h = apply_norm(params["final_norm"], x, cfg)
+        return logits(params["embed"], h[:, -1:, :], cfg), states
+
+    def decode_step(self, params, states, batch, pctx=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["token"][:, None], cfg)
+        x, new_states = stack_decode(params["stack"], x, cfg, "ssm",
+                                     caches=states, pos=batch["pos"],
+                                     pctx=pctx)
+        h = apply_norm(params["final_norm"], x, cfg)
+        return logits(params["embed"], h, cfg), new_states
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        s, d_in, nh, conv_ch = ssm_lib._dims(cfg)
+        gn = s.n_groups * s.d_state
+        L = cfg.n_layers
+        dt = dtype_of(cfg)
+        W = s.d_conv - 1
+        return {"conv": (jnp.zeros((L, batch_size, W, d_in), dt),
+                         jnp.zeros((L, batch_size, W, gn), dt),
+                         jnp.zeros((L, batch_size, W, gn), dt)),
+                "ssm": jnp.zeros((L, batch_size, nh, s.head_dim, s.d_state),
+                                 jnp.float32)}
+
+
+# --------------------------------------------------------------- Hybrid model
+@dataclasses.dataclass(frozen=True)
+class HybridLM:
+    """Zamba2-style: groups of Mamba-2 layers, each group followed by ONE
+    shared attention+MLP block (single weight copy)."""
+    cfg: ArchConfig
+
+    @property
+    def group_size(self) -> int:
+        return self.cfg.hybrid_attn_every
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // self.group_size
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        keys = jax.random.split(ks[1], self.n_groups)
+        stack = jax.vmap(
+            lambda k: init_stack(k, cfg, "ssm", self.group_size))(keys)
+        return {
+            "embed": init_embedding(ks[0], cfg),
+            "groups": stack,                     # (G, group_size, ...)
+            "shared": init_block(ks[2], cfg, "dense"),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+
+    def _forward(self, params, x, positions, pctx):
+        cfg = self.cfg
+
+        def group_step(carry, group_p):
+            h, _ = stack_forward(group_p, carry, cfg, "ssm",
+                                 positions=positions, pctx=pctx)
+            h, cache = jax.checkpoint(
+                lambda hh: block_forward(params["shared"], hh, cfg, "dense",
+                                         positions=positions, pctx=pctx))(h)
+            return h, cache
+
+        x, attn_caches = jax.lax.scan(group_step, x, params["groups"])
+        return x, attn_caches
+
+    def loss_fn(self, params, batch, pctx=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, _ = self._forward(params, x, positions, pctx)
+        h = apply_norm(params["final_norm"], x, cfg)
+        return lm_loss(params["embed"], h[:, :-1], batch["labels"][:, 1:],
+                       cfg)
+
+    def prefill(self, params, batch, pctx=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def group_step(carry, group_p):
+            h, ssm_states = stack_forward(group_p, carry, cfg, "ssm",
+                                          positions=positions, pctx=pctx)
+            h, attn_cache = block_forward(params["shared"], h, cfg, "dense",
+                                          positions=positions, pctx=pctx)
+            return h, (ssm_states, attn_cache)
+
+        x, (ssm_states, attn_caches) = jax.lax.scan(group_step, x,
+                                                    params["groups"])
+        h = apply_norm(params["final_norm"], x, cfg)
+        return logits(params["embed"], h[:, -1:, :], cfg), \
+            {"ssm": ssm_states, "attn": attn_caches}
+
+    def decode_step(self, params, caches, batch, pctx=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["token"][:, None], cfg)
+        pos = batch["pos"]
+
+        def group_step(carry, xs):
+            group_p, sstate, acache = xs
+            h, new_s = stack_decode(group_p, carry, cfg, "ssm",
+                                    caches=sstate, pos=pos, pctx=pctx)
+            h, new_a = block_decode(params["shared"], h, cfg, "dense",
+                                    cache=acache, pos=pos, pctx=pctx)
+            return h, (new_s, new_a)
+
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            group_step, x, (params["groups"], caches["ssm"], caches["attn"]))
+        h = apply_norm(params["final_norm"], x, cfg)
+        return logits(params["embed"], h, cfg), \
+            {"ssm": new_ssm, "attn": new_attn}
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        s, d_in, nh, conv_ch = ssm_lib._dims(cfg)
+        gn = s.n_groups * s.d_state
+        G, gs = self.n_groups, self.group_size
+        hd = cfg.resolved_head_dim
+        dt = dtype_of(cfg)
+        W = s.d_conv - 1
+        return {
+            "ssm": {"conv": (jnp.zeros((G, gs, batch_size, W, d_in), dt),
+                             jnp.zeros((G, gs, batch_size, W, gn), dt),
+                             jnp.zeros((G, gs, batch_size, W, gn), dt)),
+                    "ssm": jnp.zeros((G, gs, batch_size, nh, s.head_dim,
+                                      s.d_state), jnp.float32)},
+            "attn": {"k": jnp.zeros((G, batch_size, seq_len, cfg.n_kv_heads,
+                                     hd), dt),
+                     "v": jnp.zeros((G, batch_size, seq_len, cfg.n_kv_heads,
+                                     hd), dt)},
+        }
+
+
+# --------------------------------------------------------------- EncDec model
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    """Whisper-style enc-dec; the conv frontend is a stub (precomputed frame
+    embeddings arrive in ``batch['frames']``)."""
+    cfg: ArchConfig
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": init_embedding(ks[0], cfg),
+            "enc_pos": jax.random.normal(
+                ks[3], (cfg.encdec.encoder_seq, cfg.d_model),
+                jnp.float32).astype(dtype_of(cfg)) * 0.02,
+            "encoder": init_stack(ks[1], cfg, "encoder",
+                                  cfg.encdec.n_encoder_layers),
+            "enc_norm": init_norm(cfg, cfg.d_model),
+            "decoder": init_stack(ks[2], cfg, "decoder", cfg.n_layers),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+
+    def _encode(self, params, frames, pctx):
+        cfg = self.cfg
+        x = frames.astype(dtype_of(cfg)) + params["enc_pos"]
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, _ = stack_forward(params["encoder"], x, cfg, "encoder",
+                             positions=positions, pctx=pctx, causal=False)
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    def _decode_stack(self, params, tokens, enc, pctx):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        B, S = x.shape[:2]
+        if cfg.pos_embedding == "learned":
+            x = x + jnp.take(params["embed"]["positions"], jnp.arange(S),
+                             axis=0)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, caches = stack_forward(params["decoder"], x, cfg, "decoder",
+                                  positions=positions, pctx=pctx, cross=enc)
+        return apply_norm(params["final_norm"], x, cfg), caches
+
+    def loss_fn(self, params, batch, pctx=None):
+        enc = self._encode(params, batch["frames"], pctx)
+        # cross-KV is computed per layer inside the scan from `enc`
+        h, _ = self._decode_stack(params, batch["tokens"], enc, pctx)
+        return lm_loss(params["embed"], h[:, :-1], batch["labels"][:, 1:],
+                       self.cfg)
+
+    def prefill(self, params, batch, pctx=None):
+        cfg = self.cfg
+        enc = self._encode(params, batch["frames"], pctx)
+        h, caches = self._decode_stack(params, batch["tokens"], enc, pctx)
+        # precompute per-layer cross KV for decode
+        def xkv(layer_p):
+            return attn.cross_kv(layer_p["xattn"], enc, cfg)
+        cross = jax.vmap(xkv, in_axes=0)(params["decoder"])
+        lg = logits(params["embed"], h[:, -1:, :], cfg)
+        return lg, {"self": caches, "cross": cross}
+
+    def decode_step(self, params, caches, batch, pctx=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["token"][:, None], cfg)
+        pos = batch["pos"]
+        if cfg.pos_embedding == "learned":
+            pos_b = jnp.broadcast_to(jnp.atleast_1d(
+                jnp.asarray(pos, jnp.int32)), (x.shape[0],))
+            x = x + jnp.take(params["embed"]["positions"], pos_b,
+                             axis=0)[:, None, :]
+        x, new_self = stack_decode(params["decoder"], x, cfg, "decoder",
+                                   caches=caches["self"], pos=pos, pctx=pctx,
+                                   cross_kv=caches["cross"])
+        h = apply_norm(params["final_norm"], x, cfg)
+        return logits(params["embed"], h, cfg), \
+            {"self": new_self, "cross": caches["cross"]}
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        dt = dtype_of(cfg)
+        L = cfg.n_layers
+        return {
+            "self": {"k": jnp.zeros((L, batch_size, seq_len, cfg.n_kv_heads,
+                                     hd), dt),
+                     "v": jnp.zeros((L, batch_size, seq_len, cfg.n_kv_heads,
+                                     hd), dt)},
+            "cross": (jnp.zeros((L, batch_size, cfg.encdec.encoder_seq,
+                                 cfg.n_kv_heads, hd), dt),
+                      jnp.zeros((L, batch_size, cfg.encdec.encoder_seq,
+                                 cfg.n_kv_heads, hd), dt)),
+        }
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return LM(cfg)
+    if cfg.family == "ssm":
+        return SSMLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise ValueError(cfg.family)

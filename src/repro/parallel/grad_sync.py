@@ -1,0 +1,139 @@
+"""Gradient synchronization strategies (paper C3/C4 as first-class features).
+
+Under GSPMD the per-step gradient collectives are compiler-inserted; these
+strategies exist (a) for the manual shard_map DP path used by tests and the
+collectives benchmark, and (b) to expose the policy knobs (bucketing,
+hierarchy, compression) whose lowered-collective effects are recorded in
+EXPERIMENTS.md §Perf.
+
+* ``flat``         — one psum over all DP axes (software-allreduce analog)
+* ``hierarchical`` — reduce-scatter(intra) + psum(inter) + all-gather(intra)
+                     (the NI Allreduce accelerator schedule, §4.7)
+* ``compressed``   — int8-quantized hierarchical sync with error feedback
+                     (gradient compression for the slow cross-pod hop)
+
+Bucketing: gradients are packed into contiguous buckets sized by
+CommPolicy.bucket_bytes — the cell/MTU trade-off of §4.2: small enough to
+overlap with backward compute, large enough to amortize alpha.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.comm import CommPolicy
+
+
+# ------------------------------------------------------------------ buckets
+def flatten_to_buckets(tree, bucket_bytes: int):
+    """Pack a pytree into f32 1-D buckets; returns (buckets, spec) where
+    spec allows exact unpacking."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    spec = [(l.shape, l.dtype) for l in leaves]
+    flat = [l.astype(jnp.float32).reshape(-1) for l in leaves]
+    big = jnp.concatenate(flat) if flat else jnp.zeros((0,), jnp.float32)
+    per = max(bucket_bytes // 4, 1)
+    buckets = [big[i:i + per] for i in range(0, big.size, per)]
+    return buckets, (treedef, spec)
+
+
+def unflatten_from_buckets(buckets, spec):
+    treedef, shapes = spec
+    big = jnp.concatenate(buckets) if buckets else jnp.zeros((0,), jnp.float32)
+    leaves, off = [], 0
+    for shape, dtype in shapes:
+        n = 1
+        for s in shape:
+            n *= s
+        leaves.append(big[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------- strategies
+def sync_gradients(grads, mesh, *, strategy: str = "hierarchical",
+                   intra_axis: str = "data", inter_axis: str | None = "pod",
+                   policy: CommPolicy | None = None, mean_over: int = 1):
+    """All-reduce a gradient pytree across DP axes (manual-DP path)."""
+    from repro.core.collectives import flat_allreduce, hierarchical_allreduce
+    policy = policy or CommPolicy()
+    axes = tuple(a for a in (intra_axis, inter_axis)
+                 if a and a in mesh.axis_names and mesh.shape[a] > 1)
+    if not axes:
+        return grads
+    buckets, spec = flatten_to_buckets(grads, policy.bucket_bytes(
+        int(jnp.prod(jnp.array([mesh.shape[a] for a in axes])))))
+    out = []
+    for b in buckets:
+        if strategy == "flat" or len(axes) == 1:
+            r = flat_allreduce(b, mesh, axes)
+        elif strategy == "hierarchical":
+            r = hierarchical_allreduce(b, mesh, intra_axis=axes[0],
+                                       inter_axis=axes[-1])
+        elif strategy == "compressed":
+            r = _compressed_allreduce(b, mesh, axes)
+        else:
+            raise ValueError(strategy)
+        out.append(r / mean_over)
+    return unflatten_from_buckets(out, spec)
+
+
+def _compressed_allreduce(b, mesh, axes):
+    """int8 + per-bucket scale across the slow axis; exact psum on the fast
+    axis. Error feedback is the caller's job (see CompressedSync)."""
+    from repro.core.collectives import flat_allreduce, hierarchical_allreduce
+    if len(axes) == 1:
+        return flat_allreduce(b, mesh, axes)
+
+    intra, inter = axes[0], axes[-1]
+
+    def body(x):
+        k = jax.lax.axis_size(intra)
+        pad = (-x.shape[0]) % k
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        shard = jax.lax.psum_scatter(x, intra, scatter_dimension=0,
+                                     tiled=True)
+        # quantize only the slow (cross-pod) hop
+        scale = jnp.max(jnp.abs(shard)) / 127.0
+        scale = jnp.maximum(scale, 1e-20)
+        q = jnp.round(shard / scale).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int32), inter)
+        ssum = jax.lax.psum(scale, inter) / jax.lax.axis_size(inter)
+        shard = qsum.astype(jnp.float32) * ssum
+        full = jax.lax.all_gather(shard, intra, axis=0, tiled=True)
+        return full[:b.shape[0]] if pad else full
+
+    return jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                         check_vma=False)(b)
+
+
+class CompressedSync:
+    """EF-SGD-style error feedback (Karimireddy et al. 2019): the residual
+    of the *local* quantization is carried into the next step, keeping the
+    compressed sync unbiased over time."""
+
+    def __init__(self, mesh, **kw):
+        self.mesh = mesh
+        self.kw = kw
+        self.residual = None
+
+    @staticmethod
+    def _local_quant(g):
+        scale = jnp.maximum(jnp.max(jnp.abs(g)) / 127.0, 1e-20)
+        return jnp.round(g.astype(jnp.float32) / scale) * scale
+
+    def __call__(self, grads):
+        if self.residual is None:
+            self.residual = jax.tree_util.tree_map(
+                lambda g: jnp.zeros_like(g, jnp.float32), grads)
+        e = jax.tree_util.tree_map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, self.residual)
+        g_hat = jax.tree_util.tree_map(self._local_quant, e)
+        self.residual = jax.tree_util.tree_map(jnp.subtract, e, g_hat)
+        return sync_gradients(g_hat, self.mesh, strategy="compressed",
+                              **self.kw)

@@ -1,0 +1,269 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production mesh.
+
+Axis roles (DESIGN.md §5):
+* ``data``  — DP batch axis AND FSDP weight axis (dim-0/"d_model" rows of
+  every large matrix are sharded here, ZeRO-3 style);
+* ``model`` — TP/EP axis (heads, d_ff columns, experts, vocab);
+* ``pod``   — pure DP replication across pods (gradients cross pods once
+  per step; the hierarchical-allreduce target axis).
+
+GVAS mapping (paper §4.3): a jax.Array with a NamedSharding over this mesh
+*is* a Global Virtual Address Space — (mesh coords, local index) plays the
+role of (node, rank, VA); see ``repro.core.gvas``.
+
+Head/vocab dims that do not divide the TP axis are replicated (kept exact);
+padding them to the axis size is a recorded §Perf optimization, not the
+baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.parallel.ctx import ParallelCtx
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _axis(name, ok: bool):
+    return name if ok else None
+
+
+def param_spec(path: tuple[str, ...], leaf, cfg: ArchConfig,
+               pctx: ParallelCtx) -> P:
+    """PartitionSpec for one parameter, keyed on its tree path + shape."""
+    tp, fsdp = pctx.tp_axis, "data" if "data" in pctx.mesh.axis_names else None
+    tp_n = pctx.mesh.shape[tp]
+    fsdp_n = pctx.mesh.shape[fsdp] if fsdp else 1
+    name = path[-1]
+    shape = leaf.shape
+    d = cfg.d_model
+
+    def dspec(dim_size):  # FSDP on a d_model-rows dim
+        return _axis(fsdp, _div(dim_size, fsdp_n))
+
+    # ---- embeddings
+    if name == "tokens":
+        return P(_axis(tp, _div(shape[0], tp_n)), dspec(shape[1]))
+    if name == "head":
+        return P(dspec(shape[0]), _axis(tp, _div(shape[1], tp_n)))
+    if name in ("positions", "enc_pos"):
+        return P(None, _axis(tp, _div(shape[-1], tp_n)))
+
+    # ---- attention (GQA + MLA)
+    if name in ("wq", "wk", "wv"):
+        return P(dspec(shape[0]), _axis(tp, _div(shape[1], tp_n)), None)
+    if name == "wo":
+        return P(_axis(tp, _div(shape[0], tp_n)), None, dspec(shape[2]))
+    if name in ("bq", "bk", "bv"):
+        return P(_axis(tp, _div(shape[0], tp_n)), None)
+    if name == "wq_a":
+        return P(dspec(shape[0]), None)
+    if name in ("wq_b", "wkv_b"):
+        return P(None, _axis(tp, _div(shape[1], tp_n)), None)
+    if name == "wkv_a":
+        return P(dspec(shape[0]), None)
+
+    # ---- MoE
+    if name == "router":
+        return P(dspec(shape[0]), None)
+    if len(path) >= 2 and "ffn" in path and name in ("w_gate", "w_up",
+                                                     "w_out") and len(shape) == 3:
+        # stacked expert weights: EP over 'data' (tokens' own axis, so
+        # dispatch is a data-axis all_to_all), TP over 'model' on the
+        # expert hidden dim — must match apply_moe's shard_map in_specs
+        e_ax = _axis(fsdp, _div(shape[0], fsdp_n))
+        if name == "w_out":
+            return P(e_ax, _axis(tp, _div(shape[1], tp_n)), None)
+        return P(e_ax, None, _axis(tp, _div(shape[2], tp_n)))
+
+    # ---- dense MLP (2-D) incl. shared experts / mtp proj
+    if name in ("w_gate", "w_up", "proj") and len(shape) == 2:
+        return P(dspec(shape[0]), _axis(tp, _div(shape[1], tp_n)))
+    if name == "w_out" and len(shape) == 2:
+        return P(_axis(tp, _div(shape[0], tp_n)), dspec(shape[1]))
+    if name in ("b_up",):
+        return P(_axis(tp, _div(shape[0], tp_n)))
+    if name in ("b_out",):
+        return P(None)
+
+    # ---- Mamba-2
+    if name in ("wz", "wx"):
+        return P(dspec(shape[0]), _axis(tp, _div(shape[1], tp_n)))
+    if name in ("wB", "wC", "wdt"):
+        return P(dspec(shape[0]), _axis(tp, _div(shape[1], tp_n)))
+    if name in ("conv_x", "conv_B", "conv_C"):
+        return P(None, _axis(tp, _div(shape[1], tp_n)))
+    if name in ("conv_bx", "conv_bB", "conv_bC", "norm_scale"):
+        return P(_axis(tp, _div(shape[0], tp_n)))
+    if name in ("A_log", "D", "dt_bias"):
+        return P(_axis(tp, _div(shape[0], tp_n)))
+    if name == "out_proj":
+        return P(_axis(tp, _div(shape[0], tp_n)), dspec(shape[1]))
+
+    # ---- norms & everything small: replicated
+    return P()
+
+
+def _strip_stack_dims(path, leaf, cfg) -> int:
+    """Stacked layer params have 1 (scan) or 2 (hybrid group) leading layer
+    dims; specs above address the per-layer shape."""
+    parts = [p for p in path]
+    n = 0
+    if any(k in parts for k in ("dense_stack", "moe_stack", "stack",
+                                "encoder", "decoder")):
+        n = 1
+    if "groups" in parts:
+        n = 2
+    return n
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+class _FakeLeaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def param_specs(params, cfg: ArchConfig, pctx: ParallelCtx):
+    """PartitionSpec pytree for a parameter pytree (arrays or
+    ShapeDtypeStructs)."""
+    def one(path, leaf):
+        names = _path_names(path)
+        nstack = _strip_stack_dims(names, leaf, cfg)
+        inner = param_spec(names, _FakeLeaf(leaf.shape[nstack:]), cfg, pctx)
+        return P(*([None] * nstack), *tuple(inner))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, cfg: ArchConfig, pctx: ParallelCtx):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(pctx.mesh, s),
+        param_specs(params, cfg, pctx),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(opt_state, params, cfg: ArchConfig, pctx: ParallelCtx):
+    """PartitionSpecs for an AdamW state tree: m/v mirror the param specs
+    (int8-quantized states are layout-preserving, so the spec transfers;
+    per-block scales drop the last axis' sharding if it no longer
+    divides)."""
+    pspecs = param_specs(params, cfg, pctx)
+
+    def axis_size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= pctx.mesh.shape[a]
+            return n
+        return pctx.mesh.shape[ax]
+
+    def one(ps, st):
+        if isinstance(st, dict) and set(st) == {"q", "scale"}:
+            parts = tuple(ps)
+            last = parts[-1] if parts else None
+            nblk = st["scale"].shape[-1]
+            scale_last = last if nblk % axis_size(last) == 0 else None
+            return {"q": P(*parts),
+                    "scale": P(*parts[:-1], scale_last) if parts else P()}
+        return ps
+
+    is_p = lambda x: isinstance(x, P)
+    return {
+        "m": jax.tree_util.tree_map(one, pspecs, opt_state["m"], is_leaf=is_p),
+        "v": jax.tree_util.tree_map(one, pspecs, opt_state["v"], is_leaf=is_p),
+        "step": P(),
+    }
+
+
+# ------------------------------------------------------------- activations
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, pctx: ParallelCtx):
+    """PartitionSpecs for the input batch of a given assigned shape."""
+    dp = pctx.dp_axes
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": P(dp, None)}
+        if shape.kind == "train":
+            specs["labels"] = P(dp, None)
+        if cfg.vision is not None:
+            specs["patches"] = P(dp, None, None)
+        if cfg.encdec is not None:
+            specs["frames"] = P(dp, None, None)
+        return specs
+    # decode: batch over dp when divisible, else replicate batch and rely
+    # on sequence-sharded caches (long_500k, batch=1)
+    dp_size = pctx.dp_size
+    b_ax = dp if _div(shape.global_batch, dp_size) else None
+    return {"token": P(b_ax), "pos": P()}
+
+
+def cache_specs(cache, cfg: ArchConfig, shape: ShapeConfig,
+                pctx: ParallelCtx):
+    """PartitionSpecs for KV caches / SSM states.
+
+    Leaves are identified by their dimension SUFFIX pattern (any number of
+    leading layer/group stack dims):
+      attention KV      (..., B, S, K, hd)  — B over dp; K over tp if it
+                        divides, else hd over tp; S over 'data' when the
+                        batch cannot shard (long_500k, B=1)
+      MLA latent        (..., B, S, r)      — B over dp, r over tp
+      SSM state         (..., B, h, p, n)   — B over dp, heads over tp
+      conv state        (..., B, W, ch)     — B over dp, channels over tp
+    """
+    dp = pctx.dp_axes
+    dp_size = pctx.dp_size
+    tp = pctx.tp_axis
+    tp_n = pctx.mesh.shape[tp]
+    B, S = shape.global_batch, shape.seq_len
+    batch_sharded = _div(B, dp_size)
+    b_ax = dp if batch_sharded else None
+    seq_ax = "data" if (not batch_sharded and _div(S, dp_size)) else None
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        s = leaf.shape
+        name = names[-1] if names else ""
+        in_conv = any(n == "conv" for n in names)
+        if name in ("k", "v") or (not in_conv and len(s) >= 4
+                                  and s[-3] == S):
+            # (..., B, S, K, hd)
+            nstack = len(s) - 4
+            kv_ax = tp if _div(s[-2], tp_n) else None
+            hd_ax = tp if kv_ax is None and _div(s[-1], tp_n) else None
+            return P(*([None] * nstack), b_ax, seq_ax, kv_ax, hd_ax)
+        if name in ("c_kv", "k_rope"):
+            # (..., B, S, r)
+            nstack = len(s) - 3
+            r_ax = tp if _div(s[-1], tp_n) else None
+            return P(*([None] * nstack), b_ax, seq_ax, r_ax)
+        if in_conv or (name != "ssm" and len(s) >= 3 and s[-2] <= 8):
+            # conv state (..., B, W, ch), W = d_conv-1 (tiny)
+            nstack = len(s) - 3
+            ch_ax = tp if _div(s[-1], tp_n) else None
+            return P(*([None] * nstack), b_ax, None, ch_ax)
+        # SSM state (..., B, h, p, n)
+        nstack = len(s) - 4
+        h_ax = tp if _div(s[-3], tp_n) else None
+        return P(*([None] * nstack), b_ax, h_ax, None, None)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

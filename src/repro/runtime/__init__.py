@@ -1,0 +1,6 @@
+from repro.runtime.fault import (FailureInjector, SimulatedFailure,
+                                 StragglerMonitor, run_with_recovery,
+                                 elastic_reshard)
+
+__all__ = ["FailureInjector", "SimulatedFailure", "StragglerMonitor",
+           "run_with_recovery", "elastic_reshard"]

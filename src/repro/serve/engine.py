@@ -1,0 +1,121 @@
+"""Batched serving engine: slot-based continuous batching.
+
+Serving analog of the paper's converged-traffic goal (§5.3): one compiled
+decode step serves many concurrent requests. Requests occupy fixed slots of
+a shared KV cache; prefill fills a slot (padded to the window), decode
+advances all active slots together; finished slots are recycled without
+recompiling (static shapes throughout).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return bool(self.generated and self.eos_id is not None
+                    and self.generated[-1] == self.eos_id)
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, slots: int = 4, window: int = 256,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.window = window
+        self.greedy = greedy
+        self.cache = model.init_cache(slots, window)
+        self.pos = np.zeros(slots, np.int32)           # next write position
+        self.active: list[Optional[Request]] = [None] * slots
+        self._queue: list[Request] = []
+        self._rid = itertools.count()
+        self._decode = jax.jit(model.decode_step)
+        self._results: dict[int, Request] = {}
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               eos_id: int | None = None) -> int:
+        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        self._queue.append(r)
+        return r.rid
+
+    def result(self, rid: int) -> list[int] | None:
+        r = self._results.get(rid)
+        return list(r.generated) if r is not None else None
+
+    # ------------------------------------------------------------- scheduler
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self._queue:
+                r = self._queue.pop(0)
+                self.active[slot] = r
+                # prefill the slot by teacher-forcing the prompt through
+                # decode steps (slot-local; avoids a second compiled graph);
+                # leaves this slot's next-token logits in self._pending
+                self.pos[slot] = 0
+                for tok in r.prompt:
+                    self._step_one_slot(slot, tok)
+
+    def _step_one_slot(self, slot: int, token: int):
+        """Feed one token into a slot; records the resulting logits as the
+        slot's pending next-token distribution.
+
+        Uses per-row positions so concurrent slots at different depths never
+        touch each other's cache rows (continuous batching)."""
+        toks = np.zeros(self.slots, np.int32)
+        toks[slot] = token
+        pos = np.maximum(self.pos, 0).astype(np.int32)
+        logits, cache = self._decode(
+            self.params, self.cache,
+            {"token": jnp.asarray(toks), "pos": jnp.asarray(pos)})
+        self.cache = cache
+        self.pos[slot] += 1
+        if not hasattr(self, "_pending"):
+            self._pending = np.zeros((self.slots,
+                                      logits.shape[-1]), np.float32)
+        self._pending[slot] = np.asarray(logits[slot, 0], np.float32)
+
+    def step(self) -> int:
+        """One engine step: admit + advance every active slot by one token
+        (greedy over its pending logits); returns active request count."""
+        self._admit()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        for slot in act:
+            r = self.active[slot]
+            nxt = int(np.argmax(self._pending[slot]))
+            r.generated.append(nxt)
+            if r.done:
+                self._results[r.rid] = r
+                self.active[slot] = None
+                self.pos[slot] = 0
+            else:
+                self._step_one_slot(slot, nxt)
+        return len(act)
+
+    def run_until_idle(self, max_steps: int = 1000) -> int:
+        steps = 0
+        while (self._queue or any(a is not None for a in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

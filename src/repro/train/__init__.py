@@ -1,0 +1,5 @@
+from repro.train.loop import Trainer, make_train_step
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["Trainer", "make_train_step", "AdamWConfig", "adamw_init",
+           "adamw_update"]

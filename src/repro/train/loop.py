@@ -1,0 +1,98 @@
+"""Training loop: jitted step builder + a small Trainer for the examples.
+
+``make_train_step`` is the single source of truth for the step graph —
+the dry-run lowers exactly this function at full scale (launch/dryrun.py),
+so what compiles there is what trains here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, pctx=None,
+                    microbatches: int = 1,
+                    accum_dtype=jnp.float32) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With ``microbatches > 1``, gradients accumulate over
+    sequential microbatch slices (pipeline-friendly; lowers activation
+    memory by the same factor). ``accum_dtype=bfloat16`` halves the
+    accumulator footprint for memory-floor configs (671B on one pod)."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, pctx)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def mb(i):
+                return jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // microbatches),
+                        x.shape[0] // microbatches, axis=0), batch)
+
+            def acc_fn(carry, i):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb(i))
+                return (loss_acc + l, jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), grad_acc, g)), None
+
+            zero = (jnp.zeros(()), jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (loss, grads), _ = jax.lax.scan(acc_fn, zero,
+                                            jnp.arange(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = adamw_update(grads, opt_state, params,
+                                                    opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Minimal driver used by examples/ and the fault-tolerance tests."""
+    model: Any
+    opt_cfg: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    pctx: Any = None
+
+    def init_state(self, key) -> dict:
+        params = self.model.init(key)
+        return {"params": params, "opt": adamw_init(params, self.opt_cfg)}
+
+    def make_step(self, jit: bool = True) -> Callable:
+        step = make_train_step(self.model, self.opt_cfg, self.pctx)
+
+        def fn(state, batch):
+            p, o, m = step(state["params"], state["opt"], batch)
+            return {"params": p, "opt": o}, m
+
+        return jax.jit(fn) if jit else fn
+
+    def fit(self, state, data_iter, n_steps: int, *, log_every: int = 10,
+            callback=None) -> tuple[dict, list]:
+        step_fn = self.make_step()
+        history = []
+        t0 = time.perf_counter()
+        for i, batch in enumerate(data_iter):
+            if i >= n_steps:
+                break
+            state, metrics = step_fn(state, batch)
+            if i % log_every == 0 or i == n_steps - 1:
+                loss = float(metrics["loss"])
+                history.append({"step": i, "loss": loss,
+                                "t": time.perf_counter() - t0})
+                if callback:
+                    callback(history[-1])
+        return state, history

@@ -1,0 +1,135 @@
+"""AdamW with optional block-wise int8 state quantization.
+
+Built in-repo (no optax): the framework owns its substrate. The int8 mode
+(8-bit Adam, Dettmers et al., arXiv:2110.02861 — block-wise scales) is what
+lets a 671B-parameter MoE train on a 256-chip v5e pod: m+v drop from 8 to
+~2.03 bytes/param. It doubles as the gradient-compression analog of the
+paper's bandwidth-saving tricks and is exercised in §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_states: bool = False   # int8 block-quantized m/v
+    qblock: int = 256
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+
+
+# ------------------------------------------------------- int8 block quant
+# Layout-preserving (8-bit Adam, arXiv:2110.02861): q keeps the PARAM shape
+# in int8 and scales are per last-dim block — so a parameter's
+# PartitionSpec applies verbatim to its quantized state (sharding-neutral).
+def _quantizable(p, cfg: AdamWConfig) -> bool:
+    return (cfg.quantize_states and p.ndim >= 1
+            and p.shape[-1] % cfg.qblock == 0 and p.size >= 4 * cfg.qblock)
+
+
+def _quant(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    blocks = x.reshape(x.shape[:-1] + (x.shape[-1] // block, block))
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)[..., None])
+    return q.reshape(x.shape).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray, block: int) -> jnp.ndarray:
+    blocks = q.reshape(q.shape[:-1] + (q.shape[-1] // block, block))
+    return (blocks.astype(jnp.float32) * scale[..., None]).reshape(q.shape)
+
+
+def _state_for(p: jnp.ndarray, cfg: AdamWConfig):
+    if _quantizable(p, cfg):
+        return {"q": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.zeros(p.shape[:-1] +
+                                   (p.shape[-1] // cfg.qblock,), jnp.float32)}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _read(state, shape, cfg: AdamWConfig):
+    if isinstance(state, dict):
+        return _dequant(state["q"], state["scale"], cfg.qblock)
+    return state
+
+
+def _write(val, state, cfg: AdamWConfig):
+    if isinstance(state, dict):
+        q, s = _quant(val, cfg.qblock)
+        return {"q": q, "scale": s}
+    return val
+
+
+# ---------------------------------------------------------------- schedule
+def lr_at(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+# --------------------------------------------------------------- optimizer
+def adamw_init(params, cfg: AdamWConfig):
+    return {
+        "m": jax.tree_util.tree_map(lambda p: _state_for(p, cfg), params),
+        "v": jax.tree_util.tree_map(lambda p: _state_for(p, cfg), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(step, cfg)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_state = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+
+    def upd(p, g, m_st, v_st):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * _read(m_st, p.shape, cfg) + (1 - cfg.b1) * g
+        v = cfg.b2 * _read(v_st, p.shape, cfg) + (1 - cfg.b2) * g * g
+        upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+        return new_p, _write(m, m_st, cfg), _write(v, v_st, cfg)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(opt_state["m"], is_leaf=is_state)[0]
+    flat_v = jax.tree_util.tree_flatten(opt_state["v"], is_leaf=is_state)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def opt_state_bytes_per_param(cfg: AdamWConfig) -> float:
+    if cfg.quantize_states:
+        return 2 * (1 + 4.0 / cfg.qblock)
+    return 8.0

@@ -1,0 +1,15 @@
+"""Test-session guards.
+
+The dry-run's 512-device flag must NEVER leak into the test session: smoke
+tests and benches see the real single device (multi-device tests spawn
+subprocesses with their own XLA_FLAGS).
+"""
+
+import os
+
+
+def pytest_configure(config):
+    flags = os.environ.get("XLA_FLAGS", "")
+    assert "xla_force_host_platform_device_count" not in flags, (
+        "tests must run without the dry-run device-count flag; "
+        "launch/dryrun.py is the only entry point that sets it")

@@ -1,0 +1,292 @@
+"""Validation of the ExaNet model against the paper's measured numbers.
+
+Every assertion cites the paper value (FORTH-ICS/TR-488). Tolerances follow
+DESIGN.md §7: <=5-10% where the paper explains the number mechanistically,
+and the paper's own model-vs-measurement envelope (15-25%) for the
+noise-dominated small-message collective points.
+"""
+
+import math
+
+import pytest
+
+from repro.core.exanet import ExanetMPI, Topology, DEFAULT
+from repro.core.exanet.allreduce_accel import (accel_allreduce_latency,
+                                               accel_applicable)
+
+
+@pytest.fixture(scope="module")
+def mpi():
+    return ExanetMPI()
+
+
+@pytest.fixture(scope="module")
+def mpi1():  # one rank per MPSoC (§6.1.5 accelerator comparisons)
+    return ExanetMPI(ranks_per_mpsoc=1)
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return Topology()
+
+
+# ------------------------------------------------------------------ Table 2
+TABLE2 = {  # path name -> (paper us, tolerance)
+    "intra_fpga": (1.17, 0.02),
+    "intra_qfdb_sh": (1.293, 0.05),
+    "mezz_sh": (1.579, 0.05),
+    "mezz_mh(2)": (2.0, 0.20),       # the paper's own Eq.1-style model is
+    "mezz_mh(3)": (2.111, 0.20),     # ~15% below measurement on these rows
+    "inter_mezz(3,1,2)": (2.555, 0.08),
+}
+
+
+@pytest.mark.parametrize("name", sorted(TABLE2))
+def test_osu_latency_0B_paths(name, mpi, topo):
+    src, dst = topo.table1_paths()[name]
+    model = mpi.net.mpi_latency(0, topo.route(src, dst))
+    paper, tol = TABLE2[name]
+    assert abs(model - paper) / paper <= tol, (name, model, paper)
+
+
+def test_path_structure_table1(topo):
+    """Table 1: hop structure of the named paths."""
+    paths = topo.table1_paths()
+    p = topo.route(*paths["intra_qfdb_sh"])
+    assert p.n_intra_qfdb_links == 1 and p.n_mezz_links == 0
+    p = topo.route(*paths["mezz_sh"])
+    assert p.n_mezz_links == 1 and p.n_intra_qfdb_links == 0
+    p = topo.route(*paths["mezz_mh(3)"])
+    assert p.n_mezz_links == 1 and p.n_intra_qfdb_links == 2
+    p = topo.route(*paths["inter_mezz(3,1,2)"])
+    # 3 inter-mezz + 1 intra-mezz 10G links, 2 intra-QFDB 16G links,
+    # 5 router traversals (paper: expected 2.615us via 1.17+5*L_ER+6*L_l)
+    assert p.n_mezz_links == 4 and p.n_intra_qfdb_links == 2
+    assert p.n_routers == 5
+
+
+def test_router_and_link_latency_derivation(mpi, topo):
+    """§6.1.1: single-hop inter-mezz communication latency ~409ns =
+    2*L_ER + L_l."""
+    p = DEFAULT
+    comm = 2 * p.router_latency_us + p.link_latency_us
+    assert abs(comm - 0.409) / 0.409 < 0.02
+
+
+def test_rendezvous_64B(mpi, topo):
+    """§6.1.1: 64B intra-QFDB = 5.157us (RDMA path, R5 startup dominates)."""
+    path = topo.route(0, DEFAULT.cores_per_mpsoc)
+    model = mpi.net.mpi_latency(64, path)
+    assert abs(model - 5.157) / 5.157 < 0.05
+
+
+def test_latency_4MB_matches_dma_rate(mpi, topo):
+    """§6.1.1: 4MB intra-QFDB latency 2689.4us -> DMA engine ~12.475 Gb/s."""
+    path = topo.route(0, DEFAULT.cores_per_mpsoc)
+    model = mpi.net.mpi_latency(4 << 20, path)
+    assert abs(model - 2689.4) / 2689.4 < 0.02
+    bw = mpi.net.rdma_single_stream_bw_gbps(path)
+    assert abs(bw - 12.475) / 12.475 < 0.02
+
+
+def test_osu_bw_link_utilization(mpi):
+    """§6.1.2: 13 Gb/s on a 16G link (81.9%); 6.42 Gb/s on a 10G link
+    (64.3%)."""
+    bw16 = mpi.osu_bw(4 << 20, 0, DEFAULT.cores_per_mpsoc)
+    assert abs(bw16 - 13.0) < 0.1
+    assert abs(bw16 / 16.0 - 0.819) < 0.01
+    bw10 = mpi.osu_bw(4 << 20, 0, DEFAULT.cores_per_mpsoc *
+                      DEFAULT.fpgas_per_qfdb)
+    assert abs(bw10 - 6.42) < 0.1
+    assert abs(bw10 / 10.0 - 0.643) < 0.01
+
+
+def test_osu_bibw_deviations(mpi):
+    """§6.1.2: bibw ~2x bw with deviations: -5.9% at 1MB, -18.3% at 4KB,
+    up to ~40% for small messages."""
+    for size, dev in [(1 << 20, 0.059), (4096, 0.183)]:
+        bw = mpi.osu_bw(size, 0, 4)
+        bibw = mpi.osu_bibw(size, 0, 4)
+        measured_dev = 1.0 - bibw / (2 * bw)
+        assert abs(measured_dev - dev) < 0.02, size
+    small = 1.0 - mpi.osu_bibw(64, 0, 4) / (2 * mpi.osu_bw(64, 0, 4))
+    assert 0.3 <= small <= 0.45
+
+
+def test_ni_raw_latency_constant():
+    """§6.1.1: raw packetizer->mailbox one-way ~470ns, and the MPI runtime
+    adds ~800ns (conclusion: 'the minimal MPI runtime adds almost 800 ns')."""
+    assert abs(DEFAULT.ni_raw_oneway_us - 0.47) < 1e-9
+    mpi_overhead = DEFAULT.sw_pingpong_base_us - DEFAULT.ni_raw_oneway_us
+    assert 0.6 <= mpi_overhead <= 0.8
+
+
+def test_cell_efficiency():
+    """§4.2: 2 overhead words per 16 payload words -> 16/18."""
+    assert abs(DEFAULT.cell_efficiency - 16.0 / 18.0) < 1e-12
+
+
+# ------------------------------------------------------------- §6.1.4 bcast
+def test_bcast_4ranks_1B(mpi):
+    """Fig 16/18a: 1B/4 ranks ~1.93us observed; Eq.1 underestimates ~24%."""
+    r = mpi.bcast(1, 4)
+    assert abs(r.observed_us - 1.93) / 1.93 < 0.10
+    assert 0.15 <= r.deviation <= 0.30
+
+
+def test_bcast_512_schedule(mpi):
+    """§6.1.4: 512-rank schedule = 5 mezzanine-class + 2 QFDB-class +
+    2 MPSoC-class steps."""
+    r = mpi.bcast(1, 512)
+    assert r.steps == {"mpsoc": 2, "qfdb": 2, "mezzanine": 5}
+
+
+def test_bcast_scales_as_expected(mpi):
+    """§6.1.4: deviation shrinks with rank count (9.3% at 512/1B; <=12%
+    for most large-message points); latency grows monotonically."""
+    r512 = mpi.bcast(1, 512)
+    assert r512.deviation <= 0.15
+    r4k = mpi.bcast(4096, 512)
+    assert abs(r4k.deviation) <= 0.12
+    lat = [mpi.bcast(1, n).observed_us for n in (4, 16, 64, 256, 512)]
+    assert all(b > a for a, b in zip(lat, lat[1:]))
+
+
+def test_bcast_rdma_sharing_deviation_large_msgs(mpi):
+    """§6.1.4: 512KB/4 ranks deviation ~32.4% (RDMA bandwidth sharing)."""
+    r = mpi.bcast(512 * 1024, 4)
+    assert 0.2 <= r.deviation <= 0.4
+
+
+def test_bcast_latency_doubles_for_large_messages(mpi):
+    """§6.1.3: 'For larger messages though, doubling message sizes also
+    resulted in doubling broadcast latency.'"""
+    a = mpi.bcast(1 << 20, 64).observed_us
+    b = mpi.bcast(2 << 20, 64).observed_us
+    assert 1.8 <= b / a <= 2.2
+
+
+# --------------------------------------------------------- §6.1.3/5 allreduce
+def test_allreduce_sw_4ranks(mpi):
+    """Fig 17: 4B/4 ranks = 5.34us; 64B/4 ranks = 33.62us (rendez-vous +
+    engine sharing)."""
+    assert abs(mpi.allreduce_sw(4, 4) - 5.34) / 5.34 < 0.15
+    assert abs(mpi.allreduce_sw(64, 4) - 33.62) / 33.62 < 0.20
+
+
+def test_allreduce_sw_scaling(mpi1):
+    """§6.1.5: software allreduce 256B: 39.7us @16 ranks, 76.9us @128 ranks
+    (nearly doubles); hardware stays nearly flat."""
+    s16 = mpi1.allreduce_sw(256, 16)
+    s128 = mpi1.allreduce_sw(256, 128)
+    assert abs(s16 - 39.7) / 39.7 < 0.20
+    assert abs(s128 - 76.9) / 76.9 < 0.15
+    assert 1.6 <= s128 / s16 <= 2.2
+
+
+def test_accel_allreduce_anchors():
+    """Fig 19: 16 ranks: 256B=6.79us, 512B=13.38us, 1KB=26.11us;
+    128 ranks/256B=9.61us."""
+    assert abs(accel_allreduce_latency(256, 16) - 6.79) < 0.01
+    assert abs(accel_allreduce_latency(512, 16) - 13.38) / 13.38 < 0.05
+    assert abs(accel_allreduce_latency(1024, 16) - 26.11) / 26.11 < 0.05
+    assert abs(accel_allreduce_latency(256, 128) - 9.61) < 0.01
+
+
+def test_accel_allreduce_improvement(mpi1):
+    """§6.1.5 / abstract: accelerator reduces allreduce latency by up to
+    83.4/86.2/87.1/87.9% for 16/32/64/128 ranks ('up to 88%')."""
+    paper = {16: 0.834, 32: 0.862, 64: 0.871, 128: 0.879}
+    for n, target in paper.items():
+        best = max(1 - accel_allreduce_latency(s, n) / mpi1.allreduce_sw(s, n)
+                   for s in (4, 64, 256, 1024, 4096))
+        assert abs(best - target) < 0.04, (n, best, target)
+    # monotone in rank count, and the hw latency is nearly flat vs ranks
+    hw16, hw128 = accel_allreduce_latency(256, 16), accel_allreduce_latency(256, 128)
+    assert hw128 / hw16 < 1.5
+
+
+def test_accel_applicability_rules():
+    """§4.7 constraints."""
+    assert accel_applicable(256, 16)
+    assert not accel_applicable(256, 6)        # not multiple of 4
+    assert not accel_applicable(8192, 16)      # > 4KB vector
+    assert not accel_applicable(256, 2048)     # > 1024 ranks
+    with pytest.raises(ValueError):
+        accel_allreduce_latency(256, 6)
+
+
+def test_accel_latency_blocks_linear():
+    """§6.1.5: engine triggered once per 256B block -> linear in blocks."""
+    base = accel_allreduce_latency(256, 64)
+    for k in (2, 4, 8, 16):
+        assert abs(accel_allreduce_latency(256 * k, 64) / base - k) < 1e-9
+
+
+# ------------------------------------------------------------------- Table 3
+def test_apps_table3():
+    """Table 3 parallel efficiencies: 512-rank cells are calibrated (==),
+    2-rank cells are predictions (+-7 points)."""
+    from repro.core.exanet.apps import table3, PAPER_TABLE3
+    model = table3()
+    for app, modes in PAPER_TABLE3.items():
+        for mode, pts in modes.items():
+            assert abs(model[app][mode][512] - pts[512]) <= 0.5, (app, mode)
+            assert abs(model[app][mode][2] - pts[2]) <= 7.0, (app, mode)
+
+
+def test_apps_efficiency_at_least_69pct():
+    """Abstract: 'for all these tests, parallelization efficiency is at
+    least 69%'."""
+    from repro.core.exanet.apps import ALL_APPS
+    for name, factory in ALL_APPS.items():
+        m = factory()
+        for n in (2, 8, 64, 512):
+            assert m.weak(n)["efficiency"] >= 0.685, (name, "weak", n)
+            assert m.strong(n)["efficiency"] >= 0.685, (name, "strong", n)
+
+
+def test_hpcg_comm_fraction():
+    """§6.2: HPCG comm share 0.7% @2 ranks -> 22.4% @512 ranks (strong)."""
+    from repro.core.exanet.apps import hpcg
+    m = hpcg()
+    assert m.strong(512)["comm_fraction"] == pytest.approx(0.224, abs=0.03)
+    assert m.strong(2)["comm_fraction"] < 0.02
+
+
+def test_memory_contention_lammps_weak():
+    """§6.2: LAMMPS weak efficiency 96% at 2 ranks and 89% at 4 ranks —
+    the single DDR channel is the bottleneck once all 4 cores are active."""
+    from repro.core.exanet.apps import f_mem
+    assert 1 / f_mem(2) == pytest.approx(0.96, abs=0.01)
+    assert 1 / f_mem(4) == pytest.approx(0.89, abs=0.01)
+
+
+# -------------------------------------------------------------- §5.3 overlay
+def test_ip_overlay_throughput():
+    """Fig 13: large UDP 4.7 Gb/s over the overlay vs 1.3 Gb/s baseline."""
+    from repro.core.exanet.ip_overlay import (baseline_throughput_gbps,
+                                              overlay_throughput_gbps)
+    ov = overlay_throughput_gbps(65507)   # max UDP datagram
+    base = baseline_throughput_gbps(65507)
+    assert abs(ov - 4.7) / 4.7 < 0.15
+    assert abs(base - 1.3) / 1.3 < 0.25
+    assert ov > 3 * base
+
+
+def test_ip_overlay_rtt():
+    """§5.3: RTT ~90us polling; ~2.2ms with adaptive sleep."""
+    from repro.core.exanet.ip_overlay import overlay_rtt
+    assert abs(overlay_rtt(mode="poll") - 90.0) / 90.0 < 0.25
+    assert overlay_rtt(mode="sleep") > 1500.0
+
+
+# ------------------------------------------------------------------ §7 matmul
+def test_matmul_accel_constants():
+    """§7: 128x128 tile @300MHz, 1024 flop/cycle -> 307 GFLOP/s peak;
+    measured 275 GFLOP/s (89.5% of peak); 17 GFLOPS/W."""
+    p = DEFAULT
+    peak = p.mm_clock_mhz * 1e6 * p.mm_flops_per_cycle / 1e9
+    assert abs(peak - 307.2) < 0.1
+    assert 0.85 <= p.mm_measured_gflops / peak <= 0.92
+    assert abs(p.mm_measured_gflops / p.mm_dynamic_watts - p.mm_gflops_per_watt) < 0.5

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exanet import ExanetMPI, Topology, DEFAULT
+from repro.core.exanet.allreduce_accel import (accel_allreduce_latency,
+                                               accel_applicable)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+topo = Topology()
+mpi = ExanetMPI()
+
+
+# --------------------------------------------------------------- topology
+@given(st.integers(0, DEFAULT.n_cores - 1), st.integers(0, DEFAULT.n_cores - 1))
+def test_route_properties(a, b):
+    """Routes are well-formed: contiguous, bounded hop count, symmetric
+    class; same MPSoC -> no links."""
+    p = topo.route(a, b)
+    if topo.core_to_mpsoc(a) == topo.core_to_mpsoc(b):
+        assert p.links == () and p.same_mpsoc
+        return
+    # link chain is contiguous
+    cur = topo.core_to_mpsoc(a)
+    for l in p.links:
+        assert l.src_mpsoc == cur or cur == l.src_mpsoc
+        cur = l.dst_mpsoc
+    assert cur == topo.core_to_mpsoc(b)
+    # dimension-ordered torus: at most 2+2+1 mezz hops + 2 intra-QFDB
+    assert p.n_mezz_links <= 5
+    assert p.n_intra_qfdb_links <= 2
+    rev = topo.route(b, a)
+    assert rev.n_mezz_links == p.n_mezz_links  # symmetric distance classes
+
+
+@given(st.integers(0, DEFAULT.n_cores - 1), st.integers(0, DEFAULT.n_cores - 1),
+       st.integers(0, 20))
+def test_latency_monotone_in_size(a, b, size_exp):
+    """One-way latency is monotone non-decreasing in message size."""
+    if a == b:
+        return
+    s1 = 1 << size_exp
+    s2 = s1 * 2
+    path = topo.route(a, b)
+    assert mpi.net.mpi_latency(s2, path) >= mpi.net.mpi_latency(s1, path) - 1e-9
+
+
+@given(st.integers(2, 9))
+def test_bcast_grows_with_ranks(log_n):
+    n = 1 << log_n
+    r = mpi.bcast(1, n)
+    assert r.observed_us > 0 and r.expected_us > 0
+    # binomial depth: steps sum == log2(n)
+    assert sum(r.steps.values()) == log_n
+
+
+@given(st.integers(1, 256), st.integers(2, 8))
+def test_accel_applicability_and_monotonicity(size_words, log_n):
+    n = 1 << log_n
+    size = size_words * 4
+    if not accel_applicable(size, n):
+        return
+    lat = accel_allreduce_latency(size, n)
+    assert lat > 0
+    # monotone in ranks (more server levels) and in blocks
+    if accel_applicable(size, n * 2) and n * 2 >= 8:
+        assert accel_allreduce_latency(size, n * 2) >= lat
+    if accel_applicable(size * 2, n):
+        assert accel_allreduce_latency(size * 2, n) >= lat
+
+
+# ---------------------------------------------------------- comm policy
+@given(st.integers(2, 4096))
+def test_commpolicy_crossover_consistent(p):
+    from repro.core.comm import CommPolicy
+    pol = CommPolicy()
+    thr = pol.eager_threshold_bytes(p)
+    small = max(1, thr // 4)
+    assert pol.oneshot_allreduce_s(small, p, pol.ici_bw, pol.alpha_s) <= \
+        pol.ring_allreduce_s(small, p, pol.ici_bw, pol.alpha_s) + 1e-12
+    if thr < 1 << 31:  # p=2,3: one-shot wins at every size (no crossover)
+        big = thr * 4
+        assert pol.ring_allreduce_s(big, p, pol.ici_bw, pol.alpha_s) <= \
+            pol.oneshot_allreduce_s(big, p, pol.ici_bw, pol.alpha_s) + 1e-12
+
+
+# ------------------------------------------------------------- grad sync
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=5),
+       st.integers(10, 10_000))
+def test_bucket_roundtrip(sizes, bucket_bytes):
+    """flatten_to_buckets/unflatten is exact for any tree and bucket size."""
+    from repro.parallel.grad_sync import (flatten_to_buckets,
+                                          unflatten_from_buckets)
+    key = jax.random.PRNGKey(sum(sizes))
+    tree = {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), (n,))
+            for i, n in enumerate(sizes)}
+    buckets, spec = flatten_to_buckets(tree, bucket_bytes)
+    out = unflatten_from_buckets(buckets, spec)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(tree[k]),
+                                   rtol=1e-6)
+
+
+# -------------------------------------------------------------- optimizer
+@given(st.integers(1, 6), st.integers(1, 4))
+def test_int8_quant_bounded_error(rows_exp, blocks):
+    from repro.train.optimizer import _dequant, _quant
+    n = 128 * blocks
+    x = jax.random.normal(jax.random.PRNGKey(rows_exp), (1 << rows_exp, n))
+    q, s = _quant(x, 128)
+    y = _dequant(q, s, 128)
+    # error bounded by scale/2 per block
+    max_err = np.asarray(jnp.max(jnp.abs(x - y)))
+    max_scale = np.asarray(jnp.max(s))
+    assert max_err <= max_scale * 0.5 + 1e-7
+
+
+# ------------------------------------------------------------- ssd model
+@given(st.integers(1, 3), st.integers(1, 4))
+def test_ssd_chunk_invariance(b, nc):
+    """The chunked SSD dual form is invariant to chunk size (same math)."""
+    from repro.models.ssm import ssd_chunked
+    l, h, p, n = nc * 16, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(b * 7 + nc), 4)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    B = jax.random.normal(ks[3], (b, l, 1, n))
+    C = jax.random.normal(jax.random.PRNGKey(0), (b, l, 1, n))
+    y1, s1 = ssd_chunked(x, dt, A, B, C, chunk=8)
+    y2, s2 = ssd_chunked(x, dt, A, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ------------------------------------------------------------- flash attn
+@given(st.integers(1, 2), st.sampled_from([32, 48, 96]),
+       st.sampled_from([16, 32]))
+def test_flash_chunk_invariance(b, s, chunk):
+    from repro.models.attention import flash_attention
+    H, K, hd = 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(s + chunk), 3)
+    q = jax.random.normal(ks[0], (b, s, H, hd))
+    k = jax.random.normal(ks[1], (b, s, K, hd))
+    v = jax.random.normal(ks[2], (b, s, K, hd))
+    y1 = flash_attention(q, k, v, q_chunk=chunk, kv_chunk=chunk)
+    y2 = flash_attention(q, k, v, q_chunk=s, kv_chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)

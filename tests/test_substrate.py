@@ -1,0 +1,174 @@
+"""Substrate: optimizer (incl. int8 states), data pipeline, serve engine,
+comm policy, config invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SHAPES, cell_runnable, reduced
+from repro.configs import ALL_ARCHS, get
+from repro.core.comm import CommPolicy
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   opt_state_bytes_per_param, _quant,
+                                   _dequant)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, decay_steps=1000,
+                      weight_decay=0.0, grad_clip=10.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params, cfg)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}  # d/dw w^2
+        params, opt, _ = adamw_update(g, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_int8_state_quantization_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 512)) * 3
+    q, s = _quant(x, 256)
+    y = _dequant(q, s, 256)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=3 * 2 / 127)
+
+
+def test_quantized_adamw_tracks_fp32():
+    cfg32 = AdamWConfig(lr=0.05, warmup_steps=1, weight_decay=0.0)
+    cfg8 = AdamWConfig(lr=0.05, warmup_steps=1, weight_decay=0.0,
+                       quantize_states=True, qblock=128)
+    p32 = {"w": jnp.ones((4, 256)) * 2.0}
+    p8 = {"w": jnp.ones((4, 256)) * 2.0}
+    o32, o8 = adamw_init(p32, cfg32), adamw_init(p8, cfg8)
+    assert isinstance(o8["m"]["w"], dict)          # int8 state engaged
+    assert o8["m"]["w"]["q"].shape == (4, 256)     # layout preserving
+    key = jax.random.PRNGKey(1)
+    for i in range(30):
+        key, k = jax.random.split(key)
+        g = {"w": p32["w"] + 0.1 * jax.random.normal(k, (4, 256))}
+        p32, o32, _ = adamw_update(g, o32, p32, cfg32)
+        g8 = {"w": p8["w"] + 0.1 * jax.random.normal(k, (4, 256))}
+        p8, o8, _ = adamw_update(g8, o8, p8, cfg8)
+    err = float(jnp.abs(p32["w"] - p8["w"]).mean())
+    assert err < 0.05, err
+
+
+def test_opt_bytes_per_param():
+    assert opt_state_bytes_per_param(AdamWConfig()) == 8.0
+    assert opt_state_bytes_per_param(AdamWConfig(quantize_states=True)) < 2.1
+
+
+# --------------------------------------------------------------------- data
+def test_data_determinism_and_structure():
+    from repro.data.pipeline import SyntheticTokens
+    cfg = reduced(get("deepseek-7b"))
+    ds = SyntheticTokens(cfg, batch=4, seq=32, seed=7)
+    a = ds.batch_at(3)
+    b = ds.batch_at(3)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = ds.batch_at(4)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    # learnable structure: next token is predictable most of the time
+    t = np.asarray(a["tokens"])
+    hits = np.mean((t[:, 1:] - t[:, :-1]) % cfg.vocab_size == 31)
+    assert hits > 0.6
+
+
+def test_prefetcher():
+    from repro.data.pipeline import Prefetcher
+    out = list(Prefetcher(iter(range(10)), depth=3))
+    assert out == list(range(10))
+
+
+# -------------------------------------------------------------------- serve
+def test_serve_engine_continuous_batching():
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+    cfg = reduced(get("exanest-lm-100m"), n_layers=1, d_model=32,
+                  vocab_size=64, n_heads=2, n_kv_heads=1, d_ff=64, head_dim=16)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=2, window=32)
+    rids = [eng.submit([1, 2, 3], max_new_tokens=4) for _ in range(3)]
+    steps = eng.run_until_idle(max_steps=100)
+    assert steps < 100
+    for rid in rids:
+        out = eng.result(rid)
+        assert out is not None and len(out) == 4
+        assert all(0 <= t < cfg.vocab_size for t in out)
+
+
+def test_serve_greedy_matches_model_decode():
+    """The engine's greedy continuation equals manual prefill+decode."""
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+    cfg = reduced(get("exanest-lm-100m"), n_layers=1, d_model=32,
+                  vocab_size=64, n_heads=2, n_kv_heads=1, d_ff=64, head_dim=16)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = [5, 9, 2]
+    eng = ServeEngine(model, params, slots=1, window=32)
+    rid = eng.submit(prompt, max_new_tokens=3)
+    eng.run_until_idle()
+    got = eng.result(rid)
+    # manual greedy decode
+    cache = model.init_cache(1, 32)
+    toks = list(prompt)
+    for pos, t in enumerate(toks):
+        lg, cache = model.decode_step(
+            params, cache, {"token": jnp.array([t]),
+                            "pos": jnp.array(pos, jnp.int32)})
+    manual = []
+    for i in range(3):
+        nxt = int(jnp.argmax(lg[0, 0]))
+        manual.append(nxt)
+        lg, cache = model.decode_step(
+            params, cache, {"token": jnp.array([nxt]),
+                            "pos": jnp.array(len(prompt) + i, jnp.int32)})
+    assert got == manual, (got, manual)
+
+
+# ------------------------------------------------------------------- policy
+def test_comm_policy_crossover():
+    pol = CommPolicy()
+    thr = pol.eager_threshold_bytes(256)
+    assert 1024 < thr < 1 << 30
+    assert pol.choose(64, 256) == "eager"
+    assert pol.choose(64 << 20, 256) == "rendezvous"
+    # bucket size amortizes alpha to 2%
+    b = pol.bucket_bytes(256)
+    ring = pol.ring_allreduce_s(b, 256, pol.ici_bw, pol.alpha_s)
+    alpha_part = 2 * 255 * pol.alpha_s
+    assert alpha_part / ring < 0.03
+
+
+# ------------------------------------------------------------------- config
+def test_cell_runnable_rules():
+    for name in ALL_ARCHS:
+        cfg = get(name)
+        ok, why = cell_runnable(cfg, SHAPES["long_500k"])
+        if name in ("mamba2-2.7b", "zamba2-2.7b"):
+            assert ok, name
+        else:
+            assert not ok and "sub-quadratic" in why, name
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_runnable(cfg, SHAPES[s])[0]
+
+
+def test_param_counts_match_published():
+    """Analytic parameter counts land near the published sizes."""
+    expect = {"deepseek-v3-671b": (650e9, 700e9),
+              "mistral-large-123b": (118e9, 126e9),
+              "starcoder2-7b": (7.0e9, 7.8e9),
+              "mamba2-2.7b": (2.6e9, 2.9e9),
+              "zamba2-2.7b": (2.3e9, 2.9e9),
+              "deepseek-7b": (6.5e9, 7.2e9),
+              "whisper-small": (0.22e9, 0.31e9)}
+    for name, (lo, hi) in expect.items():
+        n = get(name).param_count()
+        assert lo <= n <= hi, (name, n)
+    # DeepSeek-V3 active params ~37B
+    a = get("deepseek-v3-671b").active_param_count()
+    assert 34e9 <= a <= 40e9, a
