@@ -1,0 +1,80 @@
+"""Micro-benchmark: simulated collective throughput across rank counts.
+
+Times event-simulated broadcast + allreduce at 16-256 ranks, with the route
+cache / engine path table ON (the refactored default) and OFF (the
+pre-refactor per-send ``route()`` recomputation), and writes
+``BENCH_collectives.json`` with sends/sec and wall time so the speedup is
+tracked in the perf trajectory.
+
+Run: PYTHONPATH=src python benchmarks/collectives_sweep.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.exanet import ExanetMPI  # noqa: E402
+
+RANKS = (16, 64, 256)
+#: (collective, payload bytes, sends per run at n ranks)
+CASES = (
+    ("bcast", 1, lambda n: n - 1),
+    ("bcast", 4096, lambda n: n - 1),
+    ("allreduce", 4096, lambda n: n * (n.bit_length() - 1)),
+)
+
+
+def _time_runs(mpi: ExanetMPI, coll: str, size: int, nranks: int,
+               min_wall_s: float = 0.2) -> tuple[float, int]:
+    """(wall seconds, number of runs) for repeated simulations."""
+    fn = (lambda: mpi.bcast(size, nranks)) if coll == "bcast" else \
+        (lambda: mpi.allreduce(size, nranks, "recursive_doubling"))
+    fn()  # warm the caches (when enabled) outside the timed region
+    runs, wall = 0, 0.0
+    t0 = time.perf_counter()
+    while wall < min_wall_s:
+        fn()
+        runs += 1
+        wall = time.perf_counter() - t0
+    return wall, runs
+
+
+def sweep() -> dict:
+    results = []
+    for coll, size, sends_per_run in CASES:
+        for n in RANKS:
+            row = {"collective": coll, "size_bytes": size, "nranks": n}
+            for mode, cached in (("cached", True), ("uncached", False)):
+                mpi = ExanetMPI(cache=cached)
+                wall, runs = _time_runs(mpi, coll, size, n)
+                sends = sends_per_run(n) * runs
+                row[mode] = {"wall_s": round(wall, 4), "runs": runs,
+                             "sends_per_sec": round(sends / wall, 1)}
+            row["speedup"] = round(row["cached"]["sends_per_sec"]
+                                   / row["uncached"]["sends_per_sec"], 2)
+            results.append(row)
+            print(f"{coll:9s} {size:5d}B N={n:3d}  "
+                  f"cached={row['cached']['sends_per_sec']:>10.0f} sends/s  "
+                  f"uncached={row['uncached']['sends_per_sec']:>9.0f}  "
+                  f"speedup={row['speedup']:.2f}x")
+    at_256 = [r["speedup"] for r in results if r["nranks"] == 256]
+    return {"results": results,
+            "speedup_at_256_ranks": {"min": min(at_256), "max": max(at_256)}}
+
+
+def main(out_path: str = "BENCH_collectives.json") -> None:
+    out = sweep()
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    s = out["speedup_at_256_ranks"]
+    print(f"\nwrote {out_path}; route-cache speedup at 256 ranks: "
+          f"{s['min']:.2f}x-{s['max']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,41 @@ def osu_allreduce_rows():
     return rows
 
 
+def allreduce_schedule_rows():
+    """Beyond the paper: pluggable allreduce schedules (ring, Rabenseifner)
+    against the MPICH recursive doubling the prototype shipped with."""
+    mpi = ExanetMPI()
+    rows = []
+    for n in (8, 64):
+        for size in (1024, 65536, 1 << 20):
+            rd = mpi.allreduce(size, n, "recursive_doubling")
+            for algo in ("ring", "rabenseifner"):
+                t = mpi.allreduce(size, n, algo)
+                rows.append((f"allreduce_sched/{algo}/N{n}/{size}B", t,
+                             f"vs recursive_doubling {rd:.1f}us "
+                             f"({rd/t:.2f}x)"))
+    return rows
+
+
+def collective_zoo_rows():
+    """Collectives unlocked by the schedule/executor split: allgather,
+    alltoall, barrier, scatter/gather as ~10-line schedule definitions."""
+    mpi = ExanetMPI()
+    rows = []
+    for n in (16, 64):
+        rows.append((f"coll_zoo/allgather/N{n}/1KB", mpi.allgather(1024, n),
+                     "recursive doubling"))
+        rows.append((f"coll_zoo/alltoall/N{n}/1KB", mpi.alltoall(1024, n),
+                     "pairwise exchange"))
+        rows.append((f"coll_zoo/barrier/N{n}", mpi.barrier(n),
+                     "dissemination"))
+        rows.append((f"coll_zoo/scatter/N{n}/1KB", mpi.scatter(1024, n),
+                     "binomial"))
+        rows.append((f"coll_zoo/gather/N{n}/1KB", mpi.gather(1024, n),
+                     "binomial"))
+    return rows
+
+
 def allreduce_accel_rows():
     """Fig. 19: NI Allreduce accelerator vs software, 1 rank/MPSoC."""
     mpi1 = ExanetMPI(ranks_per_mpsoc=1)

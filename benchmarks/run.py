@@ -40,6 +40,8 @@ SECTIONS = [
     ("Fig15 osu_bw", paper_tables.osu_bw_rows),
     ("Fig16/18 osu_bcast", paper_tables.osu_bcast_rows),
     ("Fig17 osu_allreduce", paper_tables.osu_allreduce_rows),
+    ("Pluggable allreduce schedules", paper_tables.allreduce_schedule_rows),
+    ("Collective zoo (schedule split)", paper_tables.collective_zoo_rows),
     ("Fig19 allreduce accelerator", paper_tables.allreduce_accel_rows),
     ("Fig13 IP-over-ExaNet", paper_tables.ip_overlay_rows),
     ("Fig20-22/Table3 app scaling", paper_tables.apps_scaling_rows),

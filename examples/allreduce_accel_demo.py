@@ -30,6 +30,27 @@ def model_fig19():
         print(f"{n:5d}  256B  {sw:11.2f}  {hw:14.2f}  {100*(1-hw/sw):9.1f}%")
 
 
+def schedule_structure():
+    """The §4.7 accelerator as a first-class schedule (Fig. 10 rounds)."""
+    from collections import Counter
+    from repro.core.exanet.schedules import HierarchicalAccelAllreduce
+    sched = HierarchicalAccelAllreduce()
+    counts = Counter(r.label for r in sched.rounds(64, 256))
+    print(f"[schedule] 64-rank accel rounds: {dict(counts)} "
+          f"(1 client gather + log2(16 QFDBs) server levels + 1 broadcast)")
+
+
+def schedule_alternatives():
+    """Ring / Rabenseifner vs the MPICH recursive doubling the paper ran."""
+    from repro.core.exanet import ExanetMPI
+    mpi = ExanetMPI()
+    size, n = 1 << 20, 64
+    rd = mpi.allreduce(size, n, "recursive_doubling")
+    print(f"[schedules] 1MB/64-rank allreduce: recursive_doubling={rd:.0f}us"
+          + "".join(f", {a}={mpi.allreduce(size, n, a):.0f}us"
+                    for a in ("ring", "rabenseifner")))
+
+
 def kernel_combine():
     from repro.kernels.allreduce_combine.kernel import combine
     from repro.kernels.allreduce_combine.ref import combine_ref
@@ -52,6 +73,8 @@ def schedule_napkin():
 
 if __name__ == "__main__":
     model_fig19()
+    schedule_structure()
+    schedule_alternatives()
     kernel_combine()
     schedule_napkin()
     print("allreduce_accel_demo OK")

@@ -41,6 +41,22 @@ class CommPolicy:
             return 0.0
         return 2 * (p - 1) * alpha + 2 * (p - 1) / p * n_bytes / bw
 
+    def schedule_allreduce_s(self, n_bytes: int, p: int, bw: float,
+                             alpha: float, *, algo: str = "ring") -> float:
+        """Alpha-beta cost of an allreduce derived from the *schedule* that
+        the ExaNet event engine executes (repro.core.exanet.schedules), not
+        from a hand-written closed form.  For ``algo="ring"`` this coincides
+        with :meth:`ring_allreduce_s` whenever ``p`` divides ``n_bytes``;
+        ``"rabenseifner"`` and ``"recursive_doubling"`` come for free but
+        require power-of-two ``p`` (ValueError otherwise)."""
+        from repro.core.exanet.schedules import (ALLREDUCE_SCHEDULES,
+                                                 alpha_beta_cost_s)
+        if p <= 1:
+            return 0.0
+        sched = ALLREDUCE_SCHEDULES[algo]()
+        return alpha_beta_cost_s(sched, p, n_bytes, alpha_s=alpha,
+                                 bw_bytes_per_s=bw)
+
     def oneshot_allreduce_s(self, n_bytes: int, p: int, bw: float,
                             alpha: float) -> float:
         """all-gather everything + local reduce: 1 phase, alpha-cheap,

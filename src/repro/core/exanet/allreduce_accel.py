@@ -22,6 +22,7 @@ from __future__ import annotations
 import math
 
 from repro.core.exanet.params import DEFAULT, HwParams
+from repro.core.exanet.schedules import HierarchicalAccelAllreduce
 
 
 def accel_applicable(size: int, nranks: int, params: HwParams = DEFAULT) -> bool:
@@ -32,6 +33,14 @@ def accel_applicable(size: int, nranks: int, params: HwParams = DEFAULT) -> bool
             and size <= params.ar_accel_max_vector_bytes)
 
 
+def accel_server_levels(nranks: int) -> int:
+    """Inter-QFDB server-exchange levels, counted from the first-class
+    schedule (Fig. 10 structure) rather than a closed-form log."""
+    sched = HierarchicalAccelAllreduce()
+    return sum(1 for r in sched.rounds(nranks, 1)
+               if r.label == "server_exchange")
+
+
 def accel_allreduce_latency(size: int, nranks: int,
                             params: HwParams = DEFAULT) -> float:
     """Latency (us) of the accelerated allreduce.
@@ -39,12 +48,12 @@ def accel_allreduce_latency(size: int, nranks: int,
     Per 256 B block: fixed cost (software programming of the modules +
     level-0 client fetch/send + final broadcast + completion notification +
     software poll-out, calibrated 4.91 us) + one inter-QFDB server-exchange
-    level per recursive-doubling step over QFDBs (0.94 us/level).
+    level per recursive-doubling step over QFDBs (0.94 us/level, one per
+    ``server_exchange`` round of the schedule).
     """
     if not accel_applicable(size, nranks, params):
         raise ValueError(f"accelerator not applicable: size={size} N={nranks}")
     blocks = max(1, math.ceil(size / params.ar_accel_block_bytes))
-    n_qfdbs = nranks // 4
-    server_levels = int(math.log2(n_qfdbs)) if n_qfdbs > 1 else 0
-    per_block = params.ar_accel_fixed_us + server_levels * params.ar_accel_level_us
+    per_block = params.ar_accel_fixed_us + \
+        accel_server_levels(nranks) * params.ar_accel_level_us
     return blocks * per_block

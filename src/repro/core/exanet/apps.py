@@ -93,7 +93,10 @@ class AppModel:
     def _coll_us(self, n: int, mpi: ExanetMPI) -> float:
         if n == 1 or self.allreduce_per_iter == 0:
             return 0.0
-        return self.allreduce_per_iter * mpi.allreduce_sw(8, n)
+        # 8 B dot products: recursive doubling, like the MPICH runtime the
+        # paper ran (schedule-based executor, same numbers as allreduce_sw)
+        return self.allreduce_per_iter * mpi.allreduce(8, n,
+                                                       "recursive_doubling")
 
     # --------------------------------------------------------------- scaling
     #

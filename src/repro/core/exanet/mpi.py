@@ -3,8 +3,13 @@
 Point-to-point: eager (<=32 B) via packetizer/mailbox; rendez-vous otherwise
 (RTS -> CTS -> RDMA write + concurrent completion notification).
 
-Collectives use the MPICH 3.2.1 algorithms the paper used (§5.2.1):
-binomial tree for broadcast, recursive doubling for allreduce.
+Collectives are *schedules* (:mod:`repro.core.exanet.schedules`) replayed on
+the discrete-event engine by :meth:`ExanetMPI.run_schedule`; the MPICH 3.2.1
+algorithms the paper used (§5.2.1: binomial broadcast, recursive-doubling
+allreduce) keep their historical entry points (:meth:`bcast`,
+:meth:`allreduce_sw`) as thin wrappers, and the schedule split adds ring and
+Rabenseifner allreduce, allgather, alltoall, barrier and scatter/gather at
+no extra engine code.
 
 Rank placement is block-packed (4 ranks/MPSoC fills cores first), matching
 the §6.1.4 schedule decomposition: binomial step distance >=16 crosses a
@@ -15,11 +20,16 @@ otherwise it is an intra-MPSoC step.
 from __future__ import annotations
 
 import dataclasses
-import math
 
+from repro.core.exanet import sim
 from repro.core.exanet.network import Network
 from repro.core.exanet.params import DEFAULT, HwParams
-from repro.core.exanet.topology import Topology
+from repro.core.exanet.schedules import (ALLREDUCE_SCHEDULES, AllGather,
+                                         AllToAll, Barrier, BinomialBroadcast,
+                                         CollectiveSchedule, GatherBinomial,
+                                         RecursiveDoublingAllreduce,
+                                         ScatterBinomial)
+from repro.core.exanet.topology import Path, Topology
 
 
 @dataclasses.dataclass
@@ -34,12 +44,30 @@ class BcastResult:
         return (self.observed_us - self.expected_us) / self.observed_us
 
 
+@dataclasses.dataclass
+class ScheduleResult:
+    """Outcome of one schedule execution on the event engine."""
+    latency_us: float
+    clocks: list[float]                       # per-rank completion times
+    round_heads: list[tuple[int, int]]        # first (src, dst) per round
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.round_heads)
+
+
 class ExanetMPI:
     def __init__(self, params: HwParams = DEFAULT, *,
-                 ranks_per_mpsoc: int | None = None):
+                 ranks_per_mpsoc: int | None = None, trace: bool = False,
+                 cache: bool = True):
+        """``cache=False`` disables both the route cache and the engine's
+        path table — the pre-refactor per-send ``route()`` behaviour, kept
+        for the collectives_sweep speedup benchmark."""
         self.p = params
-        self.topo = Topology(params)
-        self.net = Network(self.topo, params)
+        self.topo = Topology(params) if cache else \
+            Topology(params, route_cache_size=0)
+        self.net = Network(self.topo, params,
+                           engine=sim.Engine(trace=trace, cache_paths=cache))
         self._rpm = ranks_per_mpsoc
 
     # --------------------------------------------------------- rank placement
@@ -50,44 +78,133 @@ class ExanetMPI:
             return rank * self.p.cores_per_mpsoc
         return rank
 
+    def _cores(self, nranks: int) -> list[int]:
+        """Rank -> core map, cached per rank count."""
+        cache = getattr(self, "_cores_cache", None)
+        if cache is None:
+            cache = self._cores_cache = {}
+        cores = cache.get(nranks)
+        if cores is None:
+            cores = cache[nranks] = [self.rank_core(r) for r in range(nranks)]
+        return cores
+
+    def _rank_path(self, r0: int, r1: int | None) -> Path:
+        """Route between two ranks; ``r1=None`` means the default
+        intra-QFDB neighbour used by the OSU pair benchmarks."""
+        if r1 is None:
+            r1 = self.p.cores_per_mpsoc
+        return self.topo.route(self.rank_core(r0), self.rank_core(r1))
+
     # ------------------------------------------------------- microbenchmarks
     def osu_latency(self, size: int, r0: int = 0, r1: int | None = None) -> float:
         """Half ping-pong latency (osu_latency)."""
-        if r1 is None:
-            r1 = self.p.cores_per_mpsoc  # intra-QFDB neighbour by default
-        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
-        return self.net.mpi_latency(size, path)
+        return self.net.mpi_latency(size, self._rank_path(r0, r1))
 
     def osu_one_way(self, size: int, r0: int, r1: int) -> float:
-        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
-        return self.net.mpi_latency(size, path, one_way=True)
+        return self.net.mpi_latency(size, self._rank_path(r0, r1),
+                                    one_way=True)
 
     def osu_bw(self, size: int, r0: int = 0, r1: int | None = None) -> float:
-        if r1 is None:
-            r1 = self.p.cores_per_mpsoc
-        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
-        return self.net.osu_bw_gbps(size, path)
+        return self.net.osu_bw_gbps(size, self._rank_path(r0, r1))
 
     def osu_bibw(self, size: int, r0: int = 0, r1: int | None = None) -> float:
-        if r1 is None:
-            r1 = self.p.cores_per_mpsoc
-        path = self.topo.route(self.rank_core(r0), self.rank_core(r1))
-        return self.net.osu_bibw_gbps(size, path)
+        return self.net.osu_bibw_gbps(size, self._rank_path(r0, r1))
 
-    # ------------------------------------------------------------- broadcast
-    def _binomial_schedule(self, n: int) -> list[list[tuple[int, int]]]:
-        """Binomial-tree (MPICH) broadcast schedule: list of steps, each a
-        list of (src_rank, dst_rank) pairs. Step distances N/2, N/4, ..., 1."""
-        steps = []
-        d = n // 2
-        while d >= 1:
-            pairs = [(r, r + d) for r in range(0, n, 2 * d) if r + d < n]
-            steps.append(pairs)
-            d //= 2
-        return steps
+    # ------------------------------------------------------ endpoint software
+    def _copy_us(self, nbytes: int) -> float:
+        """One A53 memcpy (buffer in / buffer out of the MPI runtime)."""
+        if nbytes <= 0:
+            return 0.0
+        return nbytes / self.p.a53_copy_bw_bytes_per_us + \
+            self.p.a53_call_overhead_us
 
-    def _step_class(self, pairs: list[tuple[int, int]]) -> str:
-        src, dst = pairs[0]
+    def _reduce_us(self, nbytes: int) -> float:
+        """MPI_Reduce_local: read two operands + write one (3x traffic)."""
+        if nbytes <= 0:
+            return 0.0
+        return 3.0 * nbytes / self.p.a53_copy_bw_bytes_per_us + \
+            self.p.a53_call_overhead_us
+
+    # --------------------------------------------------------- the executor
+    def run_schedule(self, sched: CollectiveSchedule, size: int,
+                     nranks: int) -> ScheduleResult:
+        """Replay a schedule's rounds on the event engine.
+
+        One-way rounds relay data down a tree (receiver clock = arrival,
+        sender clock = send-engine return).  Exchange rounds have
+        MPI_Sendrecv semantics: both directions must complete (plus the
+        rendez-vous end-to-end-ACK R5 charge on each sender's MPSoC,
+        §4.5.2) before the per-round software penalty and local reduction.
+        """
+        p = self.p
+        net = self.net
+        send = net._send
+        one_way = sched.one_way
+        eager_max = p.mpi_eager_max_bytes
+        r5_occ = p.r5_occupancy_us
+        net.reset()
+        cores = self._cores(nranks)
+        r5s = None  # per-rank R5 resources, built lazily (rdv rounds only)
+        clocks = [self._copy_us(sched.pre_copy_bytes(size))] * nranks
+        # per-step sync skew (§6.1.4 noise stand-in) hits every rank equally,
+        # so it is tracked as one running offset instead of N list writes;
+        # ``clocks`` stores times relative to -skew.
+        skew = 0.0
+        round_heads: list[tuple[int, int]] = []
+        for rnd in sched.rounds(nranks, size):
+            sends = rnd.sends
+            if not sends:
+                continue
+            round_heads.append(sends[0][:2])
+            if rnd.exchange:
+                arrivals = [0.0] * nranks
+                done = [0.0] * nranks
+                rdv = sends[0][2] > eager_max
+                for (s, d, nb) in sends:
+                    complete, sender_free = send(cores[s], cores[d], nb,
+                                                 clocks[s] + skew, one_way)
+                    if complete > arrivals[d]:
+                        arrivals[d] = complete
+                    done[s] = sender_free
+                if rdv:
+                    # end-to-end ACK processing is a second R5 invocation on
+                    # the sender's MPSoC (§4.5.2) and serializes with other
+                    # channels.
+                    if r5s is None:
+                        r5s = [net.engine.resource(
+                            sim.R5, self.topo.core_to_mpsoc(c))
+                            for c in cores]
+                    for (s, _, _) in sends:
+                        done[s] = r5s[s].acquire(done[s], r5_occ) + r5_occ
+                penalty = p.sendrecv_sw_rdv_us if rdv else \
+                    p.sendrecv_sw_eager_us
+                t_red = self._reduce_us(rnd.reduce_bytes)
+                participants = {s for (s, _, _) in sends} | \
+                    {d for (_, d, _) in sends}
+                for r in participants:
+                    clocks[r] = max(done[r], arrivals[r]) + penalty + t_red \
+                        - skew
+            else:
+                for (s, d, nb) in sends:
+                    complete, sender_free = send(cores[s], cores[d], nb,
+                                                 clocks[s] + skew, one_way)
+                    complete -= skew
+                    if complete > clocks[d]:
+                        clocks[d] = complete
+                    clocks[s] = sender_free - skew
+                if rnd.reduce_bytes:
+                    t_red = self._reduce_us(rnd.reduce_bytes)
+                    for d in {d for (_, d, _) in sends}:
+                        clocks[d] += t_red
+            if rnd.sync:
+                # deterministic stand-in for per-step late-arrival noise
+                # (§6.1.4)
+                skew += p.step_sync_us
+        total = max(clocks) + skew + \
+            self._copy_us(sched.post_copy_bytes(size)) + p.barrier_exit_us
+        return ScheduleResult(total, [c + skew for c in clocks], round_heads)
+
+    def _step_class(self, src: int, dst: int) -> str:
         d = abs(dst - src) * (self.p.cores_per_mpsoc if self._rpm == 1 else 1)
         cpq = self.p.cores_per_mpsoc * self.p.fpgas_per_qfdb
         if d >= cpq:
@@ -96,25 +213,16 @@ class ExanetMPI:
             return "qfdb"
         return "mpsoc"
 
+    # ------------------------------------------------------------- broadcast
     def bcast(self, size: int, nranks: int) -> BcastResult:
         """Event-simulated binomial broadcast vs the Eq. 1 expectation."""
-        assert nranks & (nranks - 1) == 0, "power-of-two ranks as in §6.1.4"
-        self.net.reset()
-        clocks = [0.0] * nranks
-        schedule = self._binomial_schedule(nranks)
+        sched = BinomialBroadcast()
+        res = self.run_schedule(sched, size, nranks)
         counts = {"mpsoc": 0, "qfdb": 0, "mezzanine": 0}
-        for pairs in schedule:
-            counts[self._step_class(pairs)] += 1
-            for (s, d) in pairs:
-                res = self.net.send(self.rank_core(s), self.rank_core(d), size,
-                                    clocks[s], one_way=True)
-                clocks[d] = max(clocks[d], res.t_complete)
-                clocks[s] = res.t_sender_free
-            # deterministic stand-in for per-step late-arrival noise (§6.1.4)
-            clocks = [c + self.p.step_sync_us for c in clocks]
-        observed = max(clocks) + self.p.barrier_exit_us
+        for (s, d) in res.round_heads:
+            counts[self._step_class(s, d)] += 1
         expected = self.bcast_expected(size, counts)
-        return BcastResult(observed, expected, dict(counts))
+        return BcastResult(res.latency_us, expected, counts)
 
     def bcast_expected(self, size: int, counts: dict[str, int]) -> float:
         """Eq. 1: L_exp = Ns_MPSoC*L_MPSoC + Ns_QFDB*L_QFDB + Ns_mezz*L_mezz,
@@ -132,39 +240,43 @@ class ExanetMPI:
         return self.net.mpi_latency(size, path, one_way=True)
 
     # ------------------------------------------------------------- allreduce
+    def allreduce(self, size: int, nranks: int,
+                  algo: str = "recursive_doubling") -> float:
+        """Event-simulated software allreduce with a pluggable schedule
+        (``recursive_doubling`` | ``ring`` | ``rabenseifner``)."""
+        sched_cls = ALLREDUCE_SCHEDULES.get(algo)
+        if sched_cls is None:
+            raise ValueError(f"unknown allreduce algo {algo!r}; "
+                             f"options: {sorted(ALLREDUCE_SCHEDULES)}")
+        return self.run_schedule(sched_cls(), size, nranks).latency_us
+
     def allreduce_sw(self, size: int, nranks: int) -> float:
         """Recursive-doubling software allreduce (§6.1.3): per step an
         MPI_Sendrecv (full exchange) + MPI_Reduce_local; one memcpy in, one
         memcpy out. Event-simulated with R5/DMA contention."""
-        assert nranks & (nranks - 1) == 0
-        self.net.reset()
-        p = self.p
-        t_cpy = size / p.a53_copy_bw_bytes_per_us + p.a53_call_overhead_us
-        t_red = 3.0 * size / p.a53_copy_bw_bytes_per_us + p.a53_call_overhead_us
-        rdv = size > p.mpi_eager_max_bytes
-        penalty = p.sendrecv_sw_rdv_us if rdv else p.sendrecv_sw_eager_us
-        clocks = [t_cpy] * nranks
-        for i in range(int(math.log2(nranks))):
-            d = 1 << i
-            arrivals = [0.0] * nranks
-            done = [0.0] * nranks
-            for r in range(nranks):
-                partner = r ^ d
-                res = self.net.send(self.rank_core(r), self.rank_core(partner),
-                                    size, clocks[r])
-                arrivals[partner] = max(arrivals[partner], res.t_complete)
-                done[r] = res.t_sender_free
-            if rdv:
-                # end-to-end ACK processing is a second R5 invocation on the
-                # sender's MPSoC (§4.5.2) and serializes with other channels.
-                for r in range(nranks):
-                    m = self.topo.core_to_mpsoc(self.rank_core(r))
-                    done[r] = self.net.charge_r5(m, done[r])
-            for r in range(nranks):
-                # sendrecv returns when both directions complete; then reduce
-                clocks[r] = max(done[r], arrivals[r]) + penalty + t_red
-        return max(clocks) + t_cpy + p.barrier_exit_us
+        return self.allreduce(size, nranks, "recursive_doubling")
 
     def allreduce_hw(self, size: int, nranks: int) -> float:
         from repro.core.exanet.allreduce_accel import accel_allreduce_latency
         return accel_allreduce_latency(size, nranks, self.p)
+
+    # ------------------------------------------- schedule-split collectives
+    def allgather(self, size: int, nranks: int) -> float:
+        """All-gather ``size`` bytes per rank (recursive doubling)."""
+        return self.run_schedule(AllGather(), size, nranks).latency_us
+
+    def alltoall(self, size: int, nranks: int) -> float:
+        """Pairwise-exchange all-to-all of ``size`` bytes per pair."""
+        return self.run_schedule(AllToAll(), size, nranks).latency_us
+
+    def barrier(self, nranks: int) -> float:
+        """Dissemination barrier (empty eager messages)."""
+        return self.run_schedule(Barrier(), 0, nranks).latency_us
+
+    def scatter(self, size: int, nranks: int) -> float:
+        """Binomial scatter of ``size`` bytes per rank from rank 0."""
+        return self.run_schedule(ScatterBinomial(), size, nranks).latency_us
+
+    def gather(self, size: int, nranks: int) -> float:
+        """Binomial gather of ``size`` bytes per rank to rank 0."""
+        return self.run_schedule(GatherBinomial(), size, nranks).latency_us

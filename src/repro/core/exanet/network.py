@@ -12,15 +12,19 @@ Implements the transports of §4.4-4.5:
 The closed forms are calibrated from component measurements (see
 ``params.py``) and reproduce the paper's end-to-end numbers; the *event* API
 adds resource contention (per-MPSoC R5 firmware, AXI/DMA wire, packetizer)
-so that collective schedules exhibit the sharing effects of §6.1.4.
+so that collective schedules exhibit the sharing effects of §6.1.4.  The
+shared-resource bookkeeping itself lives in :mod:`repro.core.exanet.sim`;
+``Network`` contributes the hardware math and drives the engine.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
+import math
 
+from repro.core.exanet import sim
 from repro.core.exanet.params import DEFAULT, HwParams
+from repro.core.exanet.sim import Engine, PathMetrics, TraceEvent
 from repro.core.exanet.topology import INTRA_QFDB, MEZZ, Path, Topology
 
 EAGER = "eager"
@@ -31,7 +35,7 @@ def _gbps_to_bytes_per_us(gbps: float) -> float:
     return gbps * 1000.0 / 8.0  # 1 Gb/s = 125 B/us
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class SendResult:
     t_depart: float      # when the send call was issued
     t_complete: float    # when the payload fully arrived at the receiver
@@ -41,17 +45,27 @@ class SendResult:
 class Network:
     """Latency/bandwidth model with optional resource contention."""
 
-    def __init__(self, topo: Topology | None = None, params: HwParams = DEFAULT):
+    def __init__(self, topo: Topology | None = None, params: HwParams = DEFAULT,
+                 *, engine: Engine | None = None, trace: bool = False):
         self.p = params
         self.topo = topo or Topology(params)
+        self.engine = engine or Engine(trace=trace)
+        # hot-loop scalars (send() runs hundreds of thousands of times in a
+        # paper-scale sweep; one attribute hop instead of two)
+        self._eager_max = params.mpi_eager_max_bytes
+        self._pktz_occ = params.pktz_occupancy_us
+        self._pktz_ret = params.pktz_occupancy_us + params.a53_call_overhead_us
+        self._r5_occ = params.r5_occupancy_us
+        self._rdma_startup = params.rdma_startup_us
         self.reset()
 
     # ---------------------------------------------------------------- state
     def reset(self) -> None:
-        self._r5_free = defaultdict(float)     # mpsoc -> t
-        self._dma_free = defaultdict(float)    # mpsoc -> t (AXI/DMA wire)
-        self._pktz_free = defaultdict(float)   # mpsoc -> t
-        self._link_free = defaultdict(float)   # link key -> t
+        self.engine.reset()
+
+    @property
+    def trace(self) -> list[TraceEvent]:
+        return self.engine.trace
 
     # ------------------------------------------------------------ wire math
     def link_rate_gbps(self, kind: str) -> float:
@@ -158,10 +172,45 @@ class Network:
             return pts[0][1]
         for (s0, d0), (s1, d1) in zip(pts, pts[1:]):
             if size <= s1:
-                import math
                 f = (math.log(size) - math.log(s0)) / (math.log(s1) - math.log(s0))
                 return d0 + f * (d1 - d0)
         return pts[-1][1]
+
+    # ------------------------------------------------------------ path table
+    def path_metrics(self, src_core: int, dst_core: int) -> PathMetrics:
+        """Route + per-path constants, computed once per (src, dst) pair and
+        reused by every subsequent send through the engine."""
+        m = self.engine.metrics(src_core, dst_core)
+        if m is not None:
+            return m
+        p = self.p
+        eng = self.engine
+        path = self.topo.route(src_core, dst_core)
+        sm = self.topo.core_to_mpsoc(src_core)
+        dm = self.topo.core_to_mpsoc(dst_core)
+        hop = self._path_hop_latency(path)
+        per_byte = sum(8.0 / (self.link_rate_gbps(l.kind) * 1000.0)
+                       for l in path.links)
+        rdma_bw = self.rdma_single_stream_bw_gbps(path)
+        m = PathMetrics(
+            path=path,
+            src_mpsoc=sm,
+            dst_mpsoc=dm,
+            hop_latency_us=hop,
+            eager_wire_us_per_byte=per_byte,
+            rdma_bw_gbps=rdma_bw,
+            eager_pp_const_us=p.sw_pingpong_base_us + hop,
+            eager_ow_const_us=p.sw_oneway_base_us + hop,
+            handshake_pp_us=2.0 * (p.sw_pingpong_base_us + hop),
+            handshake_ow_us=2.0 * (p.sw_oneway_base_us + hop),
+            stream_us_per_byte=8.0 / (rdma_bw * 1000.0),
+            pktz_src=eng.resource(sim.PKTZ, sm),
+            r5_src=eng.resource(sim.R5, sm),
+            dma_src=eng.resource(sim.DMA, sm),
+            dma_dst=eng.resource(sim.DMA, dm) if dm != sm else None,
+            link_res=tuple(eng.resource(sim.LINK, l.key) for l in path.links),
+        )
+        return self.engine.register_metrics(m)
 
     # ----------------------------------------------------- event-based sends
     def send(self, src_core: int, dst_core: int, size: int, t: float,
@@ -173,44 +222,49 @@ class Network:
         * DMA/AXI wire (source read + destination write streams),
         * links along the path (payload serialization).
         """
-        p = self.p
-        path = self.topo.route(src_core, dst_core)
-        sm = self.topo.core_to_mpsoc(src_core)
-        dm = self.topo.core_to_mpsoc(dst_core)
-        if size <= p.mpi_eager_max_bytes:
-            depart = max(t, self._pktz_free[sm])
-            self._pktz_free[sm] = depart + p.pktz_occupancy_us
-            lat = self.eager_latency(size, path, one_way=one_way)
-            complete = depart + lat
-            return SendResult(t, complete, depart + p.pktz_occupancy_us +
-                              p.a53_call_overhead_us)
-        # rendez-vous
-        ctrl = self.eager_latency(0, path, one_way=one_way)
-        t_handshake = t + 2.0 * ctrl
-        start = max(t_handshake, self._r5_free[sm])
-        self._r5_free[sm] = start + p.r5_occupancy_us
-        start += p.rdma_startup_us
+        complete, sender_free = self._send(src_core, dst_core, size, t,
+                                           one_way)
+        return SendResult(t, complete, sender_free)
+
+    def _send(self, src_core: int, dst_core: int, size: int, t: float,
+              one_way: bool) -> tuple[float, float]:
+        """Allocation-free send core: (t_complete, t_sender_free).  The
+        schedule executor calls this directly — at paper scale (256 ranks)
+        it runs ~10^5 times per collective."""
+        eng = self.engine
+        m = eng.path_table.get((src_core, dst_core)) or \
+            self.path_metrics(src_core, dst_core)
+        if size <= self._eager_max:
+            depart = m.pktz_src.acquire(t, self._pktz_occ)
+            complete = depart + \
+                (m.eager_ow_const_us if one_way else m.eager_pp_const_us) + \
+                size * m.eager_wire_us_per_byte
+            sender_free = depart + self._pktz_ret
+            if eng.tracing:
+                eng.record(TraceEvent(t, src_core, dst_core, size, EAGER,
+                                      complete, sender_free))
+            return complete, sender_free
+        # rendez-vous: RTS+CTS control eager messages, then the R5 op
+        t_handshake = t + (m.handshake_ow_us if one_way else m.handshake_pp_us)
+        start = m.r5_src.acquire(t_handshake, self._r5_occ) + \
+            self._rdma_startup
         # stream occupancy: source DMA, links, destination DMA
-        bw = self.rdma_single_stream_bw_gbps(path)
-        stream_us = size * 8.0 / (bw * 1000.0)
-        start = max(start, self._dma_free[sm])
+        stream_us = size * m.stream_us_per_byte
+        start = m.dma_src.acquire(start, stream_us)
         occupied_until = start + stream_us
-        self._dma_free[sm] = occupied_until
-        for l in path.links:
-            s = max(start, self._link_free[l.key])
-            occupied_until = s + stream_us
-            self._link_free[l.key] = occupied_until
-            start = s
-        if dm != sm:  # loopback transfers use a single AXI/DMA stream
-            s = max(start, self._dma_free[dm])
-            occupied_until = s + stream_us
-            self._dma_free[dm] = occupied_until
-        complete = occupied_until + self._path_hop_latency(path)
-        return SendResult(t, complete, complete)
+        for lr in m.link_res:
+            start = lr.acquire(start, stream_us)
+            occupied_until = start + stream_us
+        if m.dma_dst is not None:  # loopback uses a single AXI/DMA stream
+            occupied_until = m.dma_dst.acquire(start, stream_us) + stream_us
+        complete = occupied_until + m.hop_latency_us
+        if eng.tracing:
+            eng.record(TraceEvent(t, src_core, dst_core, size, RDV,
+                                  complete, complete))
+        return complete, complete
 
     def charge_r5(self, mpsoc: int, t: float) -> float:
         """Charge one R5-firmware invocation (e.g. end-to-end ACK handling,
         §4.5.2) on an MPSoC; returns its completion time."""
-        s = max(t, self._r5_free[mpsoc])
-        self._r5_free[mpsoc] = s + self.p.r5_occupancy_us
-        return s + self.p.r5_occupancy_us
+        return self.engine.resource(sim.R5, mpsoc).acquire(
+            t, self._r5_occ) + self._r5_occ

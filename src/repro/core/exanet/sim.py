@@ -1,0 +1,151 @@
+"""Discrete-event simulation substrate for the ExaNet model.
+
+The paper's contention effects (§6.1.4: R5 firmware serialization, AXI/DMA
+wire sharing, link occupancy) used to be tracked by ad-hoc ``*_free`` dicts
+inside :class:`~repro.core.exanet.network.Network`.  This module extracts
+that bookkeeping into a proper engine:
+
+* :class:`Resource` — a serially-reusable unit (one R5 core, one AXI/DMA
+  wire, one packetizer, one link direction) with occupancy accounting.
+* :class:`Engine` — owns every resource of the simulated machine, an
+  optional per-send :class:`TraceEvent` log, and the **path table**: routes
+  and their derived per-path constants (:class:`PathMetrics`) are computed
+  once per (src, dst) pair and reused across sends, which is what makes
+  paper-scale sweeps (256+ ranks) fast.
+
+The closed-form latency/bandwidth math stays in ``network.py``; the engine
+is the substrate it runs on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.exanet.topology import Path
+
+#: resource kinds (the shared units of §4.4-4.5)
+R5 = "r5"        # per-MPSoC R5 transaction-layer firmware
+DMA = "dma"      # per-MPSoC AXI/DMA wire
+PKTZ = "pktz"    # per-MPSoC packetizer
+LINK = "link"    # one physical link direction
+
+
+class Resource:
+    """A serially-reusable resource with busy-time accounting."""
+
+    __slots__ = ("key", "free_at", "busy_us", "n_acquires")
+
+    def __init__(self, key: tuple):
+        self.key = key
+        self.free_at = 0.0
+        self.busy_us = 0.0
+        self.n_acquires = 0
+
+    def acquire(self, t: float, duration_us: float) -> float:
+        """Acquire from time ``t`` for ``duration_us``; returns the actual
+        start time (``max(t, free_at)``)."""
+        start = self.free_at if self.free_at > t else t
+        self.free_at = start + duration_us
+        self.busy_us += duration_us
+        self.n_acquires += 1
+        return start
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One send through the engine (recorded when tracing is enabled)."""
+    t_issue: float
+    src_core: int
+    dst_core: int
+    nbytes: int
+    transport: str          # "eager" | "rendezvous"
+    t_complete: float
+    t_sender_free: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PathMetrics:
+    """Route + per-path constants derived once and reused on every send.
+
+    Besides the physical quantities, the table pins the :class:`Resource`
+    objects the path touches, so the send hot loop is pure arithmetic plus
+    ``Resource.acquire`` calls — no dict lookups.
+    """
+    path: Path
+    src_mpsoc: int
+    dst_mpsoc: int
+    hop_latency_us: float          # links + routers + local switches
+    eager_wire_us_per_byte: float  # sum of 8/(rate*1000) over the links
+    rdma_bw_gbps: float            # single-stream RDMA bandwidth
+    eager_pp_const_us: float       # ping-pong base + hop latency
+    eager_ow_const_us: float       # one-way base + hop latency
+    handshake_pp_us: float         # 2x 0-byte eager control (RTS+CTS)
+    handshake_ow_us: float
+    stream_us_per_byte: float      # 8/(rdma_bw*1000)
+    pktz_src: Resource
+    r5_src: Resource
+    dma_src: Resource
+    dma_dst: Resource | None       # None for intra-MPSoC loopback
+    link_res: tuple                # link Resources along the path
+
+
+class Engine:
+    """Owns the shared resources, the path table and the optional trace.
+
+    ``reset()`` clears occupancy state between simulated collectives but
+    keeps the path table — routes do not change with time.
+    """
+
+    def __init__(self, *, trace: bool = False, cache_paths: bool = True):
+        self.tracing = trace
+        self.cache_paths = cache_paths
+        self._resources: dict[tuple, Resource] = {}
+        self.path_table: dict[tuple[int, int], PathMetrics] = {}
+        self.trace: list[TraceEvent] = []
+
+    # ------------------------------------------------------------- resources
+    def resource(self, kind: str, ident) -> Resource:
+        key = (kind, ident)
+        r = self._resources.get(key)
+        if r is None:
+            r = self._resources[key] = Resource(key)
+        return r
+
+    def reset(self) -> None:
+        # zero in place (don't clear): PathMetrics entries hold direct
+        # references to these Resource objects across collectives
+        for r in self._resources.values():
+            r.free_at = 0.0
+            r.busy_us = 0.0
+            r.n_acquires = 0
+        self.trace.clear()
+
+    # ------------------------------------------------------------ path table
+    def metrics(self, src_core: int, dst_core: int):
+        """Cached :class:`PathMetrics` lookup; ``None`` on miss (the caller
+        builds and registers it via :meth:`register_metrics`)."""
+        if not self.cache_paths:
+            return None
+        return self.path_table.get((src_core, dst_core))
+
+    def register_metrics(self, m: PathMetrics) -> PathMetrics:
+        if self.cache_paths:
+            self.path_table[(m.path.src_core, m.path.dst_core)] = m
+        return m
+
+    # ----------------------------------------------------------------- trace
+    def record(self, ev: TraceEvent) -> None:
+        if self.tracing:
+            self.trace.append(ev)
+
+    # ------------------------------------------------------------- reporting
+    def utilization(self, t_end: float) -> dict[tuple, float]:
+        """Busy fraction of every touched resource over [0, t_end]."""
+        if t_end <= 0.0:
+            return {}
+        return {k: r.busy_us / t_end for k, r in self._resources.items()}
+
+    def occupancy_stats(self) -> dict[tuple, dict]:
+        return {k: {"busy_us": r.busy_us, "n_acquires": r.n_acquires,
+                    "free_at": r.free_at}
+                for k, r in self._resources.items()}

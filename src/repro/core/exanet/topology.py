@@ -77,7 +77,8 @@ class Path:
 
 
 class Topology:
-    def __init__(self, params: HwParams = DEFAULT):
+    def __init__(self, params: HwParams = DEFAULT, *,
+                 route_cache_size: int = 1 << 16):
         self.p = params
         self.cores_per_mpsoc = params.cores_per_mpsoc
         self.fpgas_per_qfdb = params.fpgas_per_qfdb
@@ -86,6 +87,14 @@ class Topology:
         self.n_cores = params.n_cores
         self.n_mpsocs = params.n_mpsocs
         self.n_qfdbs = params.n_qfdbs
+        #: LRU route cache: dimension-ordered routing is deterministic, so a
+        #: (src, dst) pair always resolves to the same Path. Collectives hit
+        #: the same few pairs thousands of times; ``route_cache_size=0``
+        #: disables caching (the pre-refactor per-send behaviour).
+        self._route_cache: dict[tuple[int, int], Path] = {}
+        self._route_cache_size = route_cache_size
+        self.route_hits = 0
+        self.route_misses = 0
 
     # ------------------------------------------------------------ id helpers
     def core_to_mpsoc(self, core: int) -> int:
@@ -128,6 +137,26 @@ class Topology:
             yield cur
 
     def route(self, src_core: int, dst_core: int) -> Path:
+        """Cached dimension-ordered route (see :meth:`_compute_route`)."""
+        if not self._route_cache_size:
+            return self._compute_route(src_core, dst_core)
+        key = (src_core, dst_core)
+        cache = self._route_cache
+        path = cache.get(key)
+        if path is not None:
+            self.route_hits += 1
+            cache.pop(key)  # true LRU: refresh position on hit
+            cache[key] = path
+            return path
+        self.route_misses += 1
+        path = self._compute_route(src_core, dst_core)
+        if len(self._route_cache) >= self._route_cache_size:
+            # evict the oldest entry (dict preserves insertion order)
+            self._route_cache.pop(next(iter(self._route_cache)))
+        self._route_cache[key] = path
+        return path
+
+    def _compute_route(self, src_core: int, dst_core: int) -> Path:
         """Dimension-ordered route; returns the link sequence + router count.
 
         Router traversals: the message enters the source QFDB's Network-MPSoC

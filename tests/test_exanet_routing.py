@@ -1,0 +1,99 @@
+"""Routing invariants of the dimension-ordered 3-D torus (§4.2).
+
+Deterministic sweep over core pairs (no hypothesis dependency): hop-count
+bounds, forward/backward symmetry, Table-1 classification, and the route
+cache added for paper-scale sweeps.
+"""
+
+import pytest
+
+from repro.core.exanet import DEFAULT, Topology
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return Topology()
+
+
+def _sample_pairs(topo, stride=37):
+    """A deterministic spread of (src, dst) core pairs across the machine."""
+    n = topo.n_cores
+    pairs = []
+    for i, a in enumerate(range(0, n, stride)):
+        b = (a * 7 + i * 113 + 5) % n
+        pairs.append((a, b))
+    # make sure every Table-1 class is represented
+    pairs.extend(topo.table1_paths().values())
+    return pairs
+
+
+def test_mezz_hops_bounded_by_half_ring_sums(topo):
+    """Dimension-ordered minimal routing: at most X/2 + Y/2 + Z/2 mezzanine
+    hops (4/2 + 4/2 + 2/2 = 5 on the prototype torus)."""
+    x, y, z = topo.qfdbs_per_mezz, 4, 2
+    bound = x // 2 + y // 2 + z // 2
+    for a, b in _sample_pairs(topo):
+        p = topo.route(a, b)
+        assert p.n_mezz_links <= bound, (a, b, p.n_mezz_links)
+
+
+def test_route_reverse_symmetry(topo):
+    """route(a,b) and route(b,a) traverse the same number of links of each
+    class and the same number of routers (minimal rings are symmetric)."""
+    for a, b in _sample_pairs(topo):
+        fwd, rev = topo.route(a, b), topo.route(b, a)
+        assert fwd.n_mezz_links == rev.n_mezz_links, (a, b)
+        assert fwd.n_intra_qfdb_links == rev.n_intra_qfdb_links, (a, b)
+        assert fwd.n_routers == rev.n_routers, (a, b)
+        assert len(fwd.links) == len(rev.links), (a, b)
+
+
+def test_route_link_chain_contiguous(topo):
+    """The link sequence forms a contiguous MPSoC chain src -> dst."""
+    for a, b in _sample_pairs(topo):
+        p = topo.route(a, b)
+        cur = topo.core_to_mpsoc(a)
+        for l in p.links:
+            assert l.src_mpsoc == cur, (a, b, l)
+            cur = l.dst_mpsoc
+        assert cur == topo.core_to_mpsoc(b), (a, b)
+
+
+def test_table1_pairs_classify_to_named_kind(topo):
+    """Every named Table-1 pair routes to a path of the advertised class."""
+    expected_kind = {
+        "intra_fpga": "intra_fpga",
+        "intra_qfdb_sh": "intra_qfdb_sh",
+        "mezz_sh": "mezz_sh",
+        "mezz_mh(2)": "mezz_mh(2)",
+        "mezz_mh(3)": "mezz_mh(3)",
+        # the paper's (3 inter-mezz + 1 intra-mezz, 2 intra-QFDB) row is
+        # 4 mezzanine-level + 2 intra-QFDB links in our torus coordinates
+        "inter_mezz(3,1,2)": "inter_mezz(4,2)",
+    }
+    for name, (src, dst) in topo.table1_paths().items():
+        assert topo.route(src, dst).kind == expected_kind[name], name
+
+
+def test_route_cache_consistency():
+    """Cached and uncached routing agree; repeat lookups hit the cache."""
+    cached = Topology()
+    uncached = Topology(route_cache_size=0)
+    pairs = _sample_pairs(cached)
+    for a, b in pairs:
+        assert cached.route(a, b) == uncached.route(a, b), (a, b)
+    misses = cached.route_misses
+    for a, b in pairs:
+        cached.route(a, b)
+    assert cached.route_misses == misses  # second pass is all hits
+    assert cached.route_hits >= len(pairs)
+    assert uncached.route_hits == 0 and uncached.route_misses == 0
+
+
+def test_route_cache_eviction_bounded():
+    """A tiny cache never grows beyond its configured size."""
+    topo = Topology(route_cache_size=8)
+    for a in range(0, 64, 4):
+        for b in range(1, 65, 4):
+            topo.route(a % topo.n_cores, b % topo.n_cores)
+    assert len(topo._route_cache) <= 8

@@ -2,6 +2,10 @@
 
 import math
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,198 @@
+"""The schedule/executor split: pluggable collectives on the event engine.
+
+Covers (a) wrapper equivalence — the historical entry points are thin
+wrappers over schedules and keep their numbers; (b) the latency ordering of
+ring/Rabenseifner vs recursive doubling at large messages; (c) wire-byte
+structure of each schedule; (d) the §4.7 accelerator as a first-class
+schedule; (e) the engine's occupancy/trace bookkeeping; (f) CommPolicy's
+alpha-beta costs derived from the same schedules.
+"""
+
+import pytest
+
+from repro.core.exanet import ExanetMPI, alpha_beta_cost_s
+from repro.core.exanet.schedules import (AllGather, AllToAll, Barrier,
+                                         BinomialBroadcast, GatherBinomial,
+                                         HierarchicalAccelAllreduce,
+                                         RabenseifnerAllreduce,
+                                         RecursiveDoublingAllreduce,
+                                         RingAllreduce, ScatterBinomial)
+
+
+@pytest.fixture(scope="module")
+def mpi():
+    return ExanetMPI()
+
+
+# ------------------------------------------------------ wrapper equivalence
+def test_allreduce_sw_is_recursive_doubling_schedule(mpi):
+    for size, n in [(4, 4), (256, 16), (4096, 8)]:
+        assert mpi.allreduce_sw(size, n) == \
+            mpi.allreduce(size, n, "recursive_doubling")
+
+
+def test_bcast_wrapper_runs_binomial_schedule(mpi):
+    r = mpi.bcast(1, 512)
+    # §6.1.4 schedule decomposition survives the executor refactor
+    assert r.steps == {"mpsoc": 2, "qfdb": 2, "mezzanine": 5}
+    res = mpi.run_schedule(BinomialBroadcast(), 1, 512)
+    assert res.latency_us == pytest.approx(r.observed_us, rel=1e-12)
+    assert res.n_rounds == 9
+
+
+# --------------------------------------------------------- latency ordering
+@pytest.mark.parametrize("nranks", [8, 64])
+def test_ring_beats_recursive_doubling_at_large_messages(mpi, nranks):
+    """Ring moves 2(N-1)/N * size per rank vs recursive doubling's
+    log2(N) * size — at large sizes bandwidth wins over round count."""
+    size = 1 << 20
+    rd = mpi.allreduce(size, nranks, "recursive_doubling")
+    ring = mpi.allreduce(size, nranks, "ring")
+    assert ring < rd, (ring, rd)
+
+
+@pytest.mark.parametrize("nranks", [8, 16, 64])
+def test_rabenseifner_beats_recursive_doubling_at_large_messages(mpi, nranks):
+    """Rabenseifner has the same wire bytes as ring but only 2 log2(N)
+    rounds of fixed costs — it dominates recursive doubling at large sizes."""
+    size = 1 << 20
+    rd = mpi.allreduce(size, nranks, "recursive_doubling")
+    rab = mpi.allreduce(size, nranks, "rabenseifner")
+    assert rab < rd, (rab, rd)
+
+
+def test_recursive_doubling_wins_small_messages(mpi):
+    """At latency-dominated sizes the ring's 2(N-1) rounds lose to the
+    log2(N) rounds of recursive doubling."""
+    assert mpi.allreduce(4, 64, "recursive_doubling") < \
+        mpi.allreduce(4, 64, "ring")
+
+
+# --------------------------------------------------------- round structure
+def _per_rank_send_bytes(sched, n, size, rank=0):
+    return sum(op[2] for rnd in sched.rounds(n, size)
+               for op in rnd.sends if op[0] == rank)
+
+
+def test_schedule_wire_bytes(mpi):
+    n, size = 16, 1 << 16
+    # recursive doubling: log2(n) full-size sends per rank
+    assert _per_rank_send_bytes(RecursiveDoublingAllreduce(), n, size) == \
+        4 * size
+    # ring + Rabenseifner: bandwidth-optimal 2(n-1)/n * size per rank
+    opt = 2 * (n - 1) * size // n
+    assert _per_rank_send_bytes(RingAllreduce(), n, size) == opt
+    assert _per_rank_send_bytes(RabenseifnerAllreduce(), n, size) == opt
+
+
+def test_round_counts():
+    n = 16
+    assert sum(1 for _ in RecursiveDoublingAllreduce().rounds(n, 64)) == 4
+    assert sum(1 for _ in RingAllreduce().rounds(n, 64)) == 2 * (n - 1)
+    assert sum(1 for _ in RabenseifnerAllreduce().rounds(n, 64)) == 8
+    assert sum(1 for _ in BinomialBroadcast().rounds(n, 64)) == 4
+    assert sum(1 for _ in Barrier().rounds(n, 0)) == 4
+    assert sum(1 for _ in AllToAll().rounds(n, 64)) == n - 1
+
+
+def test_binomial_reaches_every_rank():
+    """After the broadcast rounds every rank has received exactly once."""
+    reached = {0}
+    for rnd in BinomialBroadcast().rounds(64, 1):
+        for (s, d, _) in rnd.sends:
+            assert s in reached and d not in reached, (s, d)
+            reached.add(d)
+    assert reached == set(range(64))
+
+
+def test_scatter_gather_mirror():
+    """Gather is the arrow-reversed scatter with the same block sizes."""
+    sc = [(s, d, nb) for r in ScatterBinomial().rounds(16, 8)
+          for (s, d, nb) in r.sends]
+    ga = [(d, s, nb) for r in GatherBinomial().rounds(16, 8)
+          for (s, d, nb) in r.sends]
+    assert sorted(sc) == sorted(ga)
+
+
+# ---------------------------------------------------- new collectives run
+def test_collective_zoo_executes(mpi):
+    for n in (4, 16):
+        assert mpi.allgather(256, n) > 0
+        assert mpi.alltoall(256, n) > 0
+        assert mpi.barrier(n) > 0
+        assert mpi.scatter(256, n) > 0
+        assert mpi.gather(256, n) > 0
+    # more ranks -> more rounds -> more time
+    assert mpi.barrier(64) > mpi.barrier(4)
+    assert mpi.allgather(256, 64) > mpi.allgather(256, 4)
+
+
+# --------------------------------------------------------- accel schedule
+def test_accel_schedule_structure():
+    sched = HierarchicalAccelAllreduce()
+    labels = [r.label for r in sched.rounds(64, 256)]
+    assert labels[0] == "client_reduce"
+    assert labels[-1] == "client_broadcast"
+    assert labels.count("server_exchange") == 4  # log2(16 QFDBs)
+    # level 0 fans 3 clients into each of the 16 servers
+    first = next(iter(sched.rounds(64, 256)))
+    assert len(first.sends) == 48
+    assert all(d % 4 == 0 for (_, d, _) in first.sends)
+
+
+def test_accel_schedule_nonpow2_qfdbs_matches_closed_form():
+    """12 ranks = 3 QFDBs: fold-in pre-step + floor(log2(3)) = 1 exchange
+    level, matching the historical int(log2(n_qfdbs)) closed form."""
+    from repro.core.exanet.allreduce_accel import (accel_allreduce_latency,
+                                                   accel_server_levels)
+    assert accel_server_levels(12) == 1
+    p = ExanetMPI().p
+    assert accel_allreduce_latency(256, 12) == pytest.approx(
+        p.ar_accel_fixed_us + p.ar_accel_level_us)
+
+
+# ------------------------------------------------------- engine bookkeeping
+def test_engine_trace_and_utilization():
+    mpi = ExanetMPI(trace=True)
+    r = mpi.bcast(1, 16)
+    trace = mpi.net.trace
+    assert len(trace) == 15  # binomial tree: n-1 sends
+    assert all(ev.transport == "eager" for ev in trace)
+    assert all(ev.t_complete >= ev.t_issue for ev in trace)
+    util = mpi.net.engine.utilization(r.observed_us)
+    assert util and all(0.0 <= u <= 1.0 for u in util.values())
+
+
+def test_engine_path_table_reused():
+    mpi = ExanetMPI()
+    mpi.allreduce_sw(256, 16)
+    n_paths = len(mpi.net.engine.path_table)
+    assert n_paths > 0
+    mpi.allreduce_sw(256, 16)  # reset() keeps the path table
+    assert len(mpi.net.engine.path_table) == n_paths
+
+
+# ------------------------------------------------- CommPolicy derivation
+def test_commpolicy_ring_cost_derived_from_schedule():
+    from repro.core.comm import CommPolicy
+    pol = CommPolicy()
+    for p in (4, 16, 64):
+        n = p * 4096  # divisible so chunking is exact
+        closed = pol.ring_allreduce_s(n, p, pol.ici_bw, pol.alpha_s)
+        derived = pol.schedule_allreduce_s(n, p, pol.ici_bw, pol.alpha_s,
+                                           algo="ring")
+        assert derived == pytest.approx(closed, rel=1e-12)
+
+
+def test_alpha_beta_cost_orders_algorithms():
+    """The hardware-free cost model reproduces the large-message ordering:
+    bandwidth-optimal schedules beat recursive doubling."""
+    alpha, bw = 2e-6, 1e9
+    n, p = 64 << 20, 16
+    rd = alpha_beta_cost_s(RecursiveDoublingAllreduce(), p, n,
+                           alpha_s=alpha, bw_bytes_per_s=bw)
+    ring = alpha_beta_cost_s(RingAllreduce(), p, n,
+                             alpha_s=alpha, bw_bytes_per_s=bw)
+    rab = alpha_beta_cost_s(RabenseifnerAllreduce(), p, n,
+                            alpha_s=alpha, bw_bytes_per_s=bw)
+    assert ring < rd and rab < rd
