@@ -6,7 +6,10 @@ pre-refactor per-send ``route()`` recomputation), and writes
 ``BENCH_collectives.json`` with sends/sec and wall time so the speedup is
 tracked in the perf trajectory.
 
-Run: PYTHONPATH=src python benchmarks/collectives_sweep.py
+Run: PYTHONPATH=src python benchmarks/collectives_sweep.py [--smoke]
+
+``--smoke`` (used by the CI benchmark step) drops the 256-rank sweep and
+shortens the timed windows so perf artifacts stay fresh without slowing CI.
 """
 
 from __future__ import annotations
@@ -30,7 +33,7 @@ CASES = (
 
 
 def _time_runs(mpi: ExanetMPI, coll: str, size: int, nranks: int,
-               min_wall_s: float = 0.2) -> tuple[float, int]:
+               min_wall_s: float) -> tuple[float, int]:
     """(wall seconds, number of runs) for repeated simulations."""
     fn = (lambda: mpi.bcast(size, nranks)) if coll == "bcast" else \
         (lambda: mpi.allreduce(size, nranks, "recursive_doubling"))
@@ -44,14 +47,14 @@ def _time_runs(mpi: ExanetMPI, coll: str, size: int, nranks: int,
     return wall, runs
 
 
-def sweep() -> dict:
+def sweep(ranks: tuple[int, ...], min_wall_s: float) -> dict:
     results = []
     for coll, size, sends_per_run in CASES:
-        for n in RANKS:
+        for n in ranks:
             row = {"collective": coll, "size_bytes": size, "nranks": n}
             for mode, cached in (("cached", True), ("uncached", False)):
                 mpi = ExanetMPI(cache=cached)
-                wall, runs = _time_runs(mpi, coll, size, n)
+                wall, runs = _time_runs(mpi, coll, size, n, min_wall_s)
                 sends = sends_per_run(n) * runs
                 row[mode] = {"wall_s": round(wall, 4), "runs": runs,
                              "sends_per_sec": round(sends / wall, 1)}
@@ -62,19 +65,26 @@ def sweep() -> dict:
                   f"cached={row['cached']['sends_per_sec']:>10.0f} sends/s  "
                   f"uncached={row['uncached']['sends_per_sec']:>9.0f}  "
                   f"speedup={row['speedup']:.2f}x")
-    at_256 = [r["speedup"] for r in results if r["nranks"] == 256]
-    return {"results": results,
-            "speedup_at_256_ranks": {"min": min(at_256), "max": max(at_256)}}
+    top = max(ranks)
+    at_top = [r["speedup"] for r in results if r["nranks"] == top]
+    out = {"results": results, "top_ranks": top,
+           "speedup_at_top_ranks": {"min": min(at_top), "max": max(at_top)}}
+    if top == max(RANKS):
+        # stable key for the PR-1 acceptance metric (full sweeps only; a
+        # --smoke artifact must not masquerade as the 256-rank number)
+        out["speedup_at_256_ranks"] = out["speedup_at_top_ranks"]
+    return out
 
 
-def main(out_path: str = "BENCH_collectives.json") -> None:
-    out = sweep()
+def main(out_path: str = "BENCH_collectives.json", smoke: bool = False) -> None:
+    ranks = RANKS[:-1] if smoke else RANKS
+    out = sweep(ranks, min_wall_s=0.05 if smoke else 0.2)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
-    s = out["speedup_at_256_ranks"]
-    print(f"\nwrote {out_path}; route-cache speedup at 256 ranks: "
-          f"{s['min']:.2f}x-{s['max']:.2f}x")
+    s = out["speedup_at_top_ranks"]
+    print(f"\nwrote {out_path}; route-cache speedup at {out['top_ranks']} "
+          f"ranks: {s['min']:.2f}x-{s['max']:.2f}x")
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

@@ -11,14 +11,22 @@ On TPU the same split appears in gradient synchronization:
 * bulk tensors -> reduce-scatter + all-gather pipeline, hierarchical across
   pods (the "rendez-vous" path: pay bandwidth, hide alpha).
 
-Constants are TPU v5e (roofline/hw.py); the policy exposes the predicted
-cost of each choice so EXPERIMENTS.md can show the napkin math.
+Since the MachineModel/CollectivePlanner split (DESIGN.md §3.5) this class
+is a thin facade: its alpha/beta knobs instantiate a
+:class:`repro.core.machine.TpuMachine`, its crossovers come from
+:mod:`repro.core.planner` cost functions over that machine, and its
+:attr:`planner` is what ``grad_sync``'s ``strategy="auto"`` consults per
+bucket. The closed-form numbers are unchanged; they just live in one place.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+from repro.core.machine import INTRA, TpuMachine
+from repro.core.planner import (CollectivePlanner, Plan, crossover_bytes,
+                                oneshot_cost_s, ring_cost_s)
 from repro.roofline.hw import V5E
 
 
@@ -35,11 +43,21 @@ class CommPolicy:
     #: bucket target: amortize alpha to <2% of wire time
     alpha_amortization: float = 0.02
 
+    @functools.cached_property
+    def machine(self) -> TpuMachine:
+        """The machine model these knobs describe (the planner's backend)."""
+        return TpuMachine(alpha_s=self.alpha_s, alpha_pod_s=self.alpha_pod_s,
+                          ici_bw=self.ici_bw, dcn_bw=self.dcn_bw)
+
+    @functools.cached_property
+    def planner(self) -> CollectivePlanner:
+        """Cost-driven schedule selection over :attr:`machine`; consulted by
+        ``grad_sync``'s ``strategy="auto"`` and ``benchmarks/planner_sweep``."""
+        return CollectivePlanner(self.machine, fidelity="analytic")
+
     def ring_allreduce_s(self, n_bytes: int, p: int, bw: float,
                          alpha: float) -> float:
-        if p <= 1:
-            return 0.0
-        return 2 * (p - 1) * alpha + 2 * (p - 1) / p * n_bytes / bw
+        return ring_cost_s(n_bytes, p, bw, alpha)
 
     def schedule_allreduce_s(self, n_bytes: int, p: int, bw: float,
                              alpha: float, *, algo: str = "ring") -> float:
@@ -61,33 +79,36 @@ class CommPolicy:
                             alpha: float) -> float:
         """all-gather everything + local reduce: 1 phase, alpha-cheap,
         bandwidth-expensive (the packetizer analog)."""
-        if p <= 1:
-            return 0.0
-        return alpha + (p - 1) * n_bytes / bw
+        return oneshot_cost_s(n_bytes, p, bw, alpha)
 
     def eager_threshold_bytes(self, p: int, *, bw: float | None = None,
                               alpha: float | None = None) -> int:
         """Crossover size below which the one-shot schedule wins — the
-        TPU re-derivation of the paper's 32 B eager threshold."""
+        TPU re-derivation of the paper's 32 B eager threshold (bisected by
+        :func:`repro.core.planner.crossover_bytes` over the machine's
+        one-shot/ring cost pair)."""
         bw = bw or self.ici_bw
         alpha = alpha or self.alpha_s
-        lo, hi = 1, 1 << 32
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if self.oneshot_allreduce_s(mid, p, bw, alpha) <= \
-                    self.ring_allreduce_s(mid, p, bw, alpha):
-                lo = mid + 1
-            else:
-                hi = mid
-        return lo
+        return crossover_bytes(
+            lambda n: oneshot_cost_s(n, p, bw, alpha),
+            lambda n: ring_cost_s(n, p, bw, alpha))
 
     def bucket_bytes(self, p: int) -> int:
         """Gradient bucket size so the 2(p-1) alpha terms cost <=2% of wire
         time (the cell/bucket adaptation of §4.2's small-MTU trade-off)."""
-        alpha_total = 2 * (p - 1) * self.alpha_s
-        wire_per_byte = 2 * (p - 1) / p / self.ici_bw
+        alpha, bw = self.machine.alpha_beta(INTRA)
+        alpha_total = 2 * (p - 1) * alpha
+        wire_per_byte = 2 * (p - 1) / p / bw
         return int(alpha_total / self.alpha_amortization / wire_per_byte)
 
     def choose(self, n_bytes: int, p: int) -> str:
         return ("eager" if n_bytes <= self.eager_threshold_bytes(p)
                 else "rendezvous")
+
+    def plan_bucket(self, n_bytes: int, intra: int, inter: int = 1,
+                    *, allow_lossy: bool = False) -> Plan:
+        """Planner-chosen gradient-sync strategy for one bucket (the
+        ``strategy="auto"`` entry point of ``parallel/grad_sync``).
+        ``allow_lossy=False`` restricts the candidates to exact syncs."""
+        return self.planner.plan("grad_sync", n_bytes, (intra, inter),
+                                 allow_lossy=allow_lossy)

@@ -25,11 +25,20 @@ from repro.core.exanet.params import DEFAULT, HwParams
 from repro.core.exanet.schedules import HierarchicalAccelAllreduce
 
 
+def accel_rank_applicable(nranks: int, params: HwParams = DEFAULT) -> bool:
+    """The *hardware* envelope of §4.7: <=1024 ranks, one rank per FPGA,
+    whole QFDBs (multiples of 4).  The engine itself is per-256B-block, so
+    vector size is not a hardware constraint — the historical 4 KB cap in
+    :func:`accel_applicable` is the runtime's profitability fallback, which
+    the CollectivePlanner re-derives from cost (DESIGN.md §3.5)."""
+    return nranks % 4 == 0 and 4 <= nranks <= params.ar_accel_max_ranks
+
+
 def accel_applicable(size: int, nranks: int, params: HwParams = DEFAULT) -> bool:
     """§4.7 constraints: sum/min/max over int/float/double, <=1024 ranks,
-    one rank per FPGA, whole QFDBs (multiples of 4)."""
-    return (nranks % 4 == 0
-            and 4 <= nranks <= params.ar_accel_max_ranks
+    one rank per FPGA, whole QFDBs (multiples of 4), plus the runtime's
+    4 KB profitability fallback (see :func:`accel_rank_applicable`)."""
+    return (accel_rank_applicable(nranks, params)
             and size <= params.ar_accel_max_vector_bytes)
 
 
@@ -41,19 +50,29 @@ def accel_server_levels(nranks: int) -> int:
                if r.label == "server_exchange")
 
 
-def accel_allreduce_latency(size: int, nranks: int,
-                            params: HwParams = DEFAULT) -> float:
-    """Latency (us) of the accelerated allreduce.
+def accel_cost_us(size: int, nranks: int, params: HwParams = DEFAULT) -> float:
+    """Ungated per-block cost model of the accelerated allreduce (us).
 
     Per 256 B block: fixed cost (software programming of the modules +
     level-0 client fetch/send + final broadcast + completion notification +
     software poll-out, calibrated 4.91 us) + one inter-QFDB server-exchange
     level per recursive-doubling step over QFDBs (0.94 us/level, one per
-    ``server_exchange`` round of the schedule).
+    ``server_exchange`` round of the schedule).  Valid at any vector size
+    within the rank envelope — the planner compares it against simulated
+    software cost to place the Fig. 19 crossover.
     """
-    if not accel_applicable(size, nranks, params):
-        raise ValueError(f"accelerator not applicable: size={size} N={nranks}")
+    if not accel_rank_applicable(nranks, params):
+        raise ValueError(f"accelerator rank envelope violated: N={nranks}")
     blocks = max(1, math.ceil(size / params.ar_accel_block_bytes))
     per_block = params.ar_accel_fixed_us + \
         accel_server_levels(nranks) * params.ar_accel_level_us
     return blocks * per_block
+
+
+def accel_allreduce_latency(size: int, nranks: int,
+                            params: HwParams = DEFAULT) -> float:
+    """Latency (us) of the accelerated allreduce, gated by the historical
+    runtime applicability rule (see :func:`accel_cost_us` for the model)."""
+    if not accel_applicable(size, nranks, params):
+        raise ValueError(f"accelerator not applicable: size={size} N={nranks}")
+    return accel_cost_us(size, nranks, params)

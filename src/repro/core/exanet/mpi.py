@@ -239,15 +239,41 @@ class ExanetMPI:
         path = self.topo.route(c0, c1)
         return self.net.mpi_latency(size, path, one_way=True)
 
+    # ------------------------------------------------------------- planner
+    @property
+    def planner(self):
+        """Cost-driven schedule selection over *this* instance (its rank
+        placement and calibrated params), at full event-simulation fidelity.
+        Built lazily: the planner layer is optional for plain wrapper use."""
+        planner = getattr(self, "_planner", None)
+        if planner is None:
+            from repro.core.machine import ExanetMachine
+            from repro.core.planner import CollectivePlanner
+            planner = self._planner = CollectivePlanner(
+                ExanetMachine(mpi=self), fidelity="sim")
+        return planner
+
     # ------------------------------------------------------------- allreduce
     def allreduce(self, size: int, nranks: int,
                   algo: str = "recursive_doubling") -> float:
         """Event-simulated software allreduce with a pluggable schedule
-        (``recursive_doubling`` | ``ring`` | ``rabenseifner``)."""
+        (``recursive_doubling`` | ``ring`` | ``rabenseifner`` |
+        ``oneshot``), or ``algo="auto"``: the planner picks the cheapest
+        schedule — including the §4.7 accelerator where applicable — by
+        simulated cost, reproducing the paper's Fig. 19 sw/accel crossover
+        from cost alone instead of a hand-coded threshold."""
+        if algo == "auto":
+            plan = self.planner.plan("allreduce", size, (nranks,))
+            if plan.schedule == "accel":
+                # ungated cost path: the planner (not the historical 4 KB
+                # fallback) decided the accelerator is profitable here
+                from repro.core.exanet.allreduce_accel import accel_cost_us
+                return accel_cost_us(size, nranks, self.p)
+            algo = plan.schedule
         sched_cls = ALLREDUCE_SCHEDULES.get(algo)
         if sched_cls is None:
             raise ValueError(f"unknown allreduce algo {algo!r}; "
-                             f"options: {sorted(ALLREDUCE_SCHEDULES)}")
+                             f"options: {sorted(ALLREDUCE_SCHEDULES) + ['auto']}")
         return self.run_schedule(sched_cls(), size, nranks).latency_us
 
     def allreduce_sw(self, size: int, nranks: int) -> float:

@@ -148,15 +148,14 @@ class Network:
         per-message R5/handshake overheads overlap across RDMA channels and
         throughput approaches the wire limit for large messages (§6.1.2)."""
         if size <= self.p.mpi_eager_max_bytes:
-            per_msg = max(self.p.pktz_occupancy_us * 2, 0.3)
+            per_msg = max(self.p.pktz_occupancy_us * 2,
+                          self.p.osu_bw_eager_gap_floor_us)
             wire = (size + self.p.cell_overhead_bytes) * 8.0 / (
                 self.path_wire_bw_gbps(path) * 1000.0)
             return size * 8.0 / (max(per_msg, wire) * 1000.0)
         wire_bw = self.path_wire_bw_gbps(path)
         wire = size * 8.0 / (wire_bw * 1000.0)
-        # pipelined per-message software cost that cannot overlap (matching
-        # descriptor writes + completion handling per message)
-        per_msg = 0.7
+        per_msg = self.p.osu_bw_rdv_per_msg_us
         return size * 8.0 / (max(wire, per_msg) * 1000.0)
 
     def osu_bibw_gbps(self, size: int, path: Path) -> float:

@@ -58,6 +58,16 @@ class HwParams:
     sw_oneway_base_us: float = 0.75
     #: packetizer occupancy per small message (engine serialization).
     pktz_occupancy_us: float = 0.15
+    #: floor on the per-message issue gap of the *windowed* eager stream
+    #: (osu_bw): mailbox doorbell + completion polling on the in-order A53
+    #: cannot be pipelined below this, which sets the small-message
+    #: bandwidth plateau of §6.1.2 (Fig. 15, <=32 B points).
+    osu_bw_eager_gap_floor_us: float = 0.30
+    #: non-overlappable per-message software cost in the windowed
+    #: rendez-vous stream (descriptor writes + completion handling per
+    #: message); calibrated so osu_bw approaches the 13 Gb/s wire limit
+    #: only above ~4 KB messages (§6.1.2, Fig. 15).
+    osu_bw_rdv_per_msg_us: float = 0.70
 
     # ------------------------------------------------------------------ RDMA
     #: R5-firmware transaction-layer invocation, §4.5.2: "2-4us every time it

@@ -17,6 +17,8 @@ Provided schedules:
   all-gather ring, 2(N-1) rounds of size/N chunks).
 * :class:`RabenseifnerAllreduce` — recursive-halving reduce-scatter +
   recursive-doubling all-gather (bandwidth-optimal in log N rounds).
+* :class:`OneShotAllreduce` — single-round all-gather + local reduce (the
+  "eager"/packetizer analog: one alpha, bandwidth-expensive).
 * :class:`HierarchicalAccelAllreduce` — the §4.7 NI-accelerator schedule
   (intra-QFDB client gather, inter-QFDB server recursive doubling,
   intra-QFDB broadcast) as a first-class schedule.
@@ -169,6 +171,22 @@ class RabenseifnerAllreduce(_CopyInOut):
             step, d = step + 1, d * 2
 
 
+class OneShotAllreduce(_CopyInOut):
+    """One-shot allreduce: every rank sends its full vector to every other
+    rank in a single round, then reduces the N-1 received vectors locally.
+    Latency-optimal (one alpha), bandwidth-expensive ((N-1)x wire bytes per
+    rank) — the collective analog of the paper's eager/packetizer transport
+    (§5.2.1), and the schedule behind the derived eager threshold."""
+    name = "allreduce_oneshot"
+
+    def rounds(self, nranks: int, nbytes: int) -> Iterator[Round]:
+        assert nranks >= 2
+        sends = tuple((r, (r + k) % nranks, nbytes)
+                      for r in range(nranks) for k in range(1, nranks))
+        yield Round(0, sends, exchange=True,
+                    reduce_bytes=(nranks - 1) * nbytes, label="oneshot")
+
+
 class HierarchicalAccelAllreduce(Schedule):
     """The §4.7 NI-resident accelerator schedule (Fig. 10), per 256 B block:
 
@@ -294,6 +312,7 @@ ALLREDUCE_SCHEDULES = {
     "recursive_doubling": RecursiveDoublingAllreduce,
     "ring": RingAllreduce,
     "rabenseifner": RabenseifnerAllreduce,
+    "oneshot": OneShotAllreduce,
 }
 
 
@@ -301,13 +320,20 @@ ALLREDUCE_SCHEDULES = {
 def alpha_beta_cost_s(schedule: CollectiveSchedule, nranks: int, nbytes: int,
                       *, alpha_s: float, bw_bytes_per_s: float) -> float:
     """Hardware-free LogP-style cost of a schedule: every round costs one
-    launch latency (alpha) plus the serialization of its largest send
-    (beta * bytes).  This is the model :class:`repro.core.comm.CommPolicy`
-    uses to place eager/rendez-vous-style crossovers, now derived from the
-    same round structure the event engine executes."""
+    launch latency (alpha) plus the serialization of the busiest sender's
+    outgoing bytes (beta * bytes).  For schedules where every rank sends at
+    most once per round this is the classic max-single-send model; fan-out
+    rounds (one-shot, the accelerator's client broadcast) charge the sum of
+    each source's sends, since one NI serializes them.  This is the model
+    :class:`repro.core.comm.CommPolicy` and the planner's ``analytic``
+    fidelity use to place eager/rendez-vous-style crossovers, derived from
+    the same round structure the event engine executes."""
     t = 0.0
     for rnd in schedule.rounds(nranks, nbytes):
         if not rnd.sends:
             continue
-        t += alpha_s + max(op[2] for op in rnd.sends) / bw_bytes_per_s
+        per_src: dict[int, int] = {}
+        for (src, _, nb) in rnd.sends:
+            per_src[src] = per_src.get(src, 0) + nb
+        t += alpha_s + max(per_src.values()) / bw_bytes_per_s
     return t

@@ -1,0 +1,204 @@
+"""MachineModel: the hardware half of the planner/machine split (DESIGN.md §3.5).
+
+A *machine* answers two questions about a target system, and nothing else:
+
+* :meth:`MachineModel.alpha_beta` — the (alpha seconds, beta bytes/s)
+  linearization of one communication *level* (``"intra"`` = the fast axis:
+  ICI links on TPU, intra-QFDB GTH links on the prototype; ``"inter"`` = the
+  slow axis: cross-pod DCN, inter-QFDB SFP+ links);
+* :meth:`MachineModel.cost_s` — predicted wall-clock seconds of one
+  collective schedule at a chosen *fidelity* (``"analytic"`` closed-form
+  alpha-beta, or ``"sim"`` full event simulation where available).
+
+Machines never inspect a schedule's rounds themselves: analytic costs go
+through :func:`repro.core.exanet.schedules.alpha_beta_cost_s`, simulated
+costs through the event executor (:meth:`ExanetMPI.run_schedule`).  The
+:class:`repro.core.planner.CollectivePlanner` is the only caller that ranks
+schedules; consumers (CommPolicy, grad_sync, ExanetMPI) talk to the planner.
+
+Two implementations:
+
+* :class:`ExanetMachine` — the ExaNeSt prototype, backed by the event
+  engine's :class:`PathMetrics` and the calibrated :class:`HwParams`.
+* :class:`TpuMachine` — the TPU v5e target, backed by ``roofline/hw.py``
+  constants with per-axis (ICI vs DCN) alphas and bandwidths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Protocol, runtime_checkable
+
+from repro.core.exanet.schedules import (CollectiveSchedule,
+                                         alpha_beta_cost_s)
+from repro.roofline.hw import V5E
+
+INTRA = "intra"
+INTER = "inter"
+
+
+def _schedule_feasible(schedule: CollectiveSchedule, nranks: int,
+                       nbytes: int) -> bool:
+    """A schedule is feasible when its round generator accepts the shape
+    (power-of-two constraints, minimum rank counts, QFDB multiples)."""
+    if nranks < 2:
+        return False
+    try:
+        # every schedule validates its shape before the first yield, so one
+        # round is enough — no need to materialize the whole round list
+        next(iter(schedule.rounds(nranks, nbytes)), None)
+    except (ValueError, AssertionError):
+        return False
+    return True
+
+
+@runtime_checkable
+class MachineModel(Protocol):
+    """What the planner needs from a target system (and nothing more)."""
+    name: str
+    levels: tuple[str, ...]
+
+    def alpha_beta(self, level: str = INTRA) -> tuple[float, float]:
+        """(alpha seconds, beta bytes/s) of a communication level."""
+        ...
+
+    def supports(self, schedule: CollectiveSchedule, nranks: int,
+                 nbytes: int) -> bool:
+        """Can this machine run this schedule at this shape?"""
+        ...
+
+    def cost_s(self, schedule: CollectiveSchedule, nranks: int, nbytes: int,
+               *, fidelity: str = "analytic", level: str | None = None
+               ) -> float:
+        """Predicted seconds for one execution of the schedule."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuMachine:
+    """TPU v5e mesh: closed-form alpha-beta per axis (roofline/hw.py).
+
+    There is no event simulator for the TPU target, so both fidelities are
+    analytic; ``fidelity="sim"`` silently degrades (the planner treats the
+    knob as a *maximum* fidelity).
+    """
+    #: per-collective launch/latency cost over ICI, seconds
+    alpha_s: float = 2e-6
+    #: cross-pod (DCN) alpha is orders of magnitude worse
+    alpha_pod_s: float = 5e-5
+    #: ICI per-link bandwidth, bytes/s
+    ici_bw: float = V5E.ici_link_bw
+    #: cross-pod per-chip bandwidth, bytes/s
+    dcn_bw: float = V5E.dcn_bw
+    #: HBM bandwidth, bytes/s (costs the quantize/dequantize passes of the
+    #: compressed gradient-sync candidate)
+    hbm_bw: float = V5E.hbm_bw
+
+    name: ClassVar[str] = "tpu-v5e"
+    levels: ClassVar[tuple[str, ...]] = (INTRA, INTER)
+
+    def alpha_beta(self, level: str = INTRA) -> tuple[float, float]:
+        if level == INTER:
+            return self.alpha_pod_s, self.dcn_bw
+        return self.alpha_s, self.ici_bw
+
+    def supports(self, schedule: CollectiveSchedule, nranks: int,
+                 nbytes: int) -> bool:
+        if schedule.name == "allreduce_accel":
+            return False  # no NI-resident accelerator on the TPU target
+        return _schedule_feasible(schedule, nranks, nbytes)
+
+    def cost_s(self, schedule: CollectiveSchedule, nranks: int, nbytes: int,
+               *, fidelity: str = "analytic", level: str | None = None
+               ) -> float:
+        if nranks < 2:
+            return 0.0
+        alpha, bw = self.alpha_beta(level or INTRA)
+        return alpha_beta_cost_s(schedule, nranks, nbytes,
+                                 alpha_s=alpha, bw_bytes_per_s=bw)
+
+    def memory_pass_s(self, nbytes: int) -> float:
+        """One streaming read+write pass over a buffer (HBM roundtrip)."""
+        return 2.0 * nbytes / self.hbm_bw
+
+
+class ExanetMachine:
+    """The ExaNeSt prototype, seen through the event engine.
+
+    * ``fidelity="sim"`` replays the schedule on the discrete-event engine
+      (R5/DMA/packetizer/link contention included) — the calibrated model
+      the paper-validation tests pin.
+    * ``fidelity="analytic"`` linearizes a rendez-vous sendrecv step from
+      the engine's :class:`PathMetrics` of a representative path per level
+      (alpha = handshake + R5 startup + endpoint software, beta = the
+      path's single-stream RDMA bandwidth).
+
+    The §4.7 accelerator schedule is costed by its calibrated per-block
+    closed form at either fidelity: the event executor models *software*
+    endpoints, which is exactly what the NI offload removes.
+    """
+
+    name = "exanest-prototype"
+    levels = (INTRA, INTER)
+
+    def __init__(self, mpi=None, params=None):
+        from repro.core.exanet.mpi import ExanetMPI
+        if mpi is None:
+            from repro.core.exanet.params import DEFAULT
+            mpi = ExanetMPI(params or DEFAULT, ranks_per_mpsoc=1)
+        self.mpi = mpi
+        self.params = mpi.p
+        self._ab_cache: dict[str, tuple[float, float]] = {}
+
+    def _level_alpha_beta(self, level: str) -> tuple[float, float]:
+        p = self.params
+        # representative single-hop paths: next MPSoC in the QFDB (intra),
+        # first MPSoC of the next QFDB across a mezzanine link (inter)
+        dst = p.cores_per_mpsoc if level == INTRA else \
+            p.cores_per_mpsoc * p.fpgas_per_qfdb
+        m = self.mpi.net.path_metrics(0, dst)
+        alpha_us = m.handshake_pp_us + p.rdma_startup_us + \
+            p.sendrecv_sw_rdv_us
+        bw_bytes_per_s = m.rdma_bw_gbps * 1e9 / 8.0
+        return alpha_us * 1e-6, bw_bytes_per_s
+
+    def alpha_beta(self, level: str = INTRA) -> tuple[float, float]:
+        ab = self._ab_cache.get(level)
+        if ab is None:
+            ab = self._ab_cache[level] = self._level_alpha_beta(level)
+        return ab
+
+    def _default_level(self, nranks: int) -> str:
+        """Ranks are 1/MPSoC on this machine: beyond one QFDB the schedule
+        crosses the slower inter-QFDB links."""
+        return INTRA if nranks <= self.params.fpgas_per_qfdb else INTER
+
+    def supports(self, schedule: CollectiveSchedule, nranks: int,
+                 nbytes: int) -> bool:
+        if schedule.name == "allreduce_accel":
+            # only the hardware (rank) envelope gates the candidate: the
+            # historical 4 KB vector cap is the profitability fallback the
+            # planner re-derives from cost (Fig. 19 crossover)
+            from repro.core.exanet.allreduce_accel import \
+                accel_rank_applicable
+            return accel_rank_applicable(nranks, self.params)
+        return _schedule_feasible(schedule, nranks, nbytes)
+
+    def cost_s(self, schedule: CollectiveSchedule, nranks: int, nbytes: int,
+               *, fidelity: str = "sim", level: str | None = None) -> float:
+        if nranks < 2:
+            return 0.0
+        if schedule.name == "allreduce_accel":
+            from repro.core.exanet.allreduce_accel import accel_cost_us
+            return accel_cost_us(nbytes, nranks, self.params) * 1e-6
+        if fidelity == "sim":
+            return self.mpi.run_schedule(schedule, nbytes,
+                                         nranks).latency_us * 1e-6
+        alpha, bw = self.alpha_beta(level or self._default_level(nranks))
+        return alpha_beta_cost_s(schedule, nranks, nbytes,
+                                 alpha_s=alpha, bw_bytes_per_s=bw)
+
+    def memory_pass_s(self, nbytes: int) -> float:
+        """One read+write pass on an A53 endpoint (single DDR4 channel is
+        the §6.2 bottleneck)."""
+        return 2.0 * nbytes / (self.params.a53_copy_bw_bytes_per_us * 1e6)

@@ -1,0 +1,272 @@
+"""CollectivePlanner: schedule selection by simulated cost (DESIGN.md §3.5).
+
+The paper's headline result is that *choosing the communication mechanism per
+message* is what makes the interconnect fast: eager vs rendez-vous at 32 B
+(§5.2.1), software vs NI-accelerated allreduce with up to 88% latency
+reduction below a crossover vector size (§6.2).  The repo used to hard-code
+each of those choices in a different layer; the planner is the one place
+they are all derived from machine cost.
+
+Given (collective op, payload bytes, participants per mesh axis) the planner
+enumerates candidate schedules from :mod:`repro.core.exanet.schedules`,
+costs each on a :class:`repro.core.machine.MachineModel` at the requested
+``fidelity`` (``"analytic"`` alpha-beta closed forms or ``"sim"`` full event
+simulation where the machine has one), and returns a memoized :class:`Plan`
+carrying the chosen executor key, its predicted cost, and every candidate's
+cost for auditability.
+
+Design rules (enforced by import structure, see DESIGN.md §3.5):
+
+* the planner never sees jax — it works on byte counts and axis sizes, so
+  it can run at trace time inside a jitted training step;
+* machines never see schedules' internals — costs go through
+  ``alpha_beta_cost_s`` or the event executor;
+* plans are frozen value objects; repeated queries are cache hits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+from repro.core.exanet.schedules import (HierarchicalAccelAllreduce,
+                                         OneShotAllreduce,
+                                         RabenseifnerAllreduce,
+                                         RecursiveDoublingAllreduce,
+                                         RingAllreduce)
+from repro.core.machine import INTER, INTRA, MachineModel
+
+
+# ----------------------------------------------------- closed-form anchors
+def oneshot_cost_s(nbytes: int, p: int, bw: float, alpha: float) -> float:
+    """All-gather everything + local reduce: 1 phase, alpha-cheap,
+    bandwidth-expensive (the packetizer analog).  Identical to the
+    alpha-beta cost of :class:`OneShotAllreduce` by construction."""
+    if p <= 1:
+        return 0.0
+    return alpha + (p - 1) * nbytes / bw
+
+
+def ring_cost_s(nbytes: int, p: int, bw: float, alpha: float) -> float:
+    """Bandwidth-optimal ring: 2(p-1) rounds moving size/p chunks (the
+    rendez-vous analog)."""
+    if p <= 1:
+        return 0.0
+    return 2 * (p - 1) * alpha + 2 * (p - 1) / p * nbytes / bw
+
+
+def crossover_bytes(cost_small: Callable[[int], float],
+                    cost_large: Callable[[int], float],
+                    *, hi: int = 1 << 32) -> int:
+    """Smallest message size at which ``cost_small`` stops winning, found by
+    bisection (assumes the sign of the difference flips at most once, which
+    holds whenever ``cost_small`` has the steeper per-byte slope).  Returns
+    ``hi`` when ``cost_small`` wins everywhere."""
+    lo = 1
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cost_small(mid) <= cost_large(mid):
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo
+
+
+# ------------------------------------------------------------------- plans
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Outcome of one planning query: the chosen executor key plus every
+    candidate's predicted cost (seconds), for auditing and benchmarks."""
+    op: str
+    nbytes: int
+    participants: tuple[int, ...]
+    schedule: str                        # chosen executor key
+    cost_s: float                        # predicted cost of the choice
+    costs: tuple[tuple[str, float], ...]  # every feasible candidate
+    fidelity: str
+    machine: str
+
+    def cost_of(self, name: str) -> float | None:
+        for k, v in self.costs:
+            if k == name:
+                return v
+        return None
+
+
+#: software allreduce candidates, in tie-breaking preference order
+#: (latency-optimal first: ties at tiny sizes resolve to the eager path)
+ALLREDUCE_CANDIDATES: tuple[tuple[str, type], ...] = (
+    ("oneshot", OneShotAllreduce),
+    ("recursive_doubling", RecursiveDoublingAllreduce),
+    ("rabenseifner", RabenseifnerAllreduce),
+    ("ring", RingAllreduce),
+    ("accel", HierarchicalAccelAllreduce),
+)
+
+GRAD_SYNC_STRATEGIES = ("flat", "hierarchical", "compressed")
+
+
+class CollectivePlanner:
+    """Cost-driven collective schedule selection on one machine model."""
+
+    def __init__(self, machine: MachineModel, *, fidelity: str = "analytic"):
+        self.machine = machine
+        self.fidelity = fidelity
+        self._cache: dict[tuple, Plan] = {}
+        self._hits = 0
+        self._misses = 0
+
+    # ------------------------------------------------------------- caching
+    def cache_info(self) -> dict:
+        total = self._hits + self._misses
+        return {"hits": self._hits, "misses": self._misses,
+                "size": len(self._cache),
+                "hit_rate": self._hits / total if total else 0.0}
+
+    # ------------------------------------------------------------ planning
+    def plan(self, op: str, nbytes: int, participants: tuple[int, ...] | int,
+             *, fidelity: str | None = None, allow_lossy: bool = False) -> Plan:
+        """Memoized plan for one collective.
+
+        ``op="allreduce"``: participants collapse to one rank count; the
+        candidates are every schedule in :data:`ALLREDUCE_CANDIDATES` the
+        machine supports (including the §4.7 accelerator where applicable).
+
+        ``op="grad_sync"``: participants are ``(intra, inter)`` mesh-axis
+        sizes; the candidates are the bucket strategies ``flat`` /
+        ``hierarchical`` / ``compressed`` of
+        :func:`repro.parallel.grad_sync.sync_gradients`.
+        The int8-quantized candidate is only considered with
+        ``allow_lossy=True`` — lossy compression must be an explicit caller
+        decision, never a silent cost win (its error feedback lives in
+        ``CompressedSync``).
+        """
+        if isinstance(participants, int):
+            participants = (participants,)
+        participants = tuple(int(p) for p in participants)
+        nbytes = int(nbytes)
+        fidelity = fidelity or self.fidelity
+        key = (op, nbytes, participants, fidelity, allow_lossy)
+        plan = self._cache.get(key)
+        if plan is not None:
+            self._hits += 1
+            return plan
+        self._misses += 1
+        if op == "allreduce":
+            plan = self._plan_allreduce(nbytes, participants, fidelity)
+        elif op == "grad_sync":
+            plan = self._plan_grad_sync(nbytes, participants, fidelity,
+                                        allow_lossy)
+        else:
+            raise ValueError(f"unknown collective op {op!r}; "
+                             f"options: ['allreduce', 'grad_sync']")
+        self._cache[key] = plan
+        return plan
+
+    def _pick(self, op: str, nbytes: int, participants: tuple[int, ...],
+              costs: list[tuple[str, float]], fidelity: str) -> Plan:
+        if not costs:
+            raise ValueError(f"no feasible schedule for {op} at "
+                             f"nbytes={nbytes} participants={participants} "
+                             f"on {self.machine.name}")
+        best, best_cost = costs[0]
+        for name, c in costs[1:]:
+            if c < best_cost:
+                best, best_cost = name, c
+        return Plan(op, nbytes, participants, best, best_cost,
+                    tuple(costs), fidelity, self.machine.name)
+
+    def _plan_allreduce(self, nbytes: int, participants: tuple[int, ...],
+                        fidelity: str) -> Plan:
+        p = math.prod(participants)
+        m = self.machine
+        costs = []
+        for name, factory in ALLREDUCE_CANDIDATES:
+            sched = factory()
+            if not m.supports(sched, p, nbytes):
+                continue
+            costs.append((name, m.cost_s(sched, p, nbytes,
+                                         fidelity=fidelity)))
+        return self._pick("allreduce", nbytes, participants, costs, fidelity)
+
+    # ------------------------------------------------- gradient-sync plans
+    def _best_sw_allreduce_s(self, nbytes: int, p: int, level: str,
+                             fidelity: str,
+                             exclude: tuple[str, ...] = ("accel",)) -> float:
+        """Cheapest feasible *software* allreduce at one level."""
+        m = self.machine
+        best = None
+        for name, factory in ALLREDUCE_CANDIDATES:
+            if name in exclude:
+                continue
+            sched = factory()
+            if not m.supports(sched, p, nbytes):
+                continue
+            c = m.cost_s(sched, p, nbytes, fidelity=fidelity, level=level)
+            if best is None or c < best:
+                best = c
+        if best is None:
+            raise ValueError(f"no software allreduce feasible at p={p}")
+        return best
+
+    def _plan_grad_sync(self, nbytes: int, participants: tuple[int, ...],
+                        fidelity: str, allow_lossy: bool) -> Plan:
+        """Cost the flat / hierarchical / compressed bucket strategies.
+
+        * flat — one allreduce over all k*m ranks; with an inter axis the
+          flat schedule crosses the slow links, so it is costed at the
+          ``inter`` level (the whole point of DESIGN.md §5's rule that
+          cross-pod traffic must never be the flat ring).
+        * hierarchical — ring reduce-scatter + all-gather on the intra axis
+          (together exactly one ring-allreduce cost) plus an allreduce of
+          the 1/k shard on the inter axis.
+        * compressed — hierarchical with the inter payload quantized to
+          int8 and accumulated in int16 on the wire (half the bytes while
+          the inter axis is <=255 wide, matching ``_compressed_allreduce``;
+          int32 — no wire saving — beyond that) plus two memory passes
+          (quantize + dequantize) over the shard.
+        """
+        k = participants[0] if participants else 1
+        m_axis = participants[1] if len(participants) > 1 else 1
+        machine = self.machine
+        flat_level = INTER if m_axis > 1 else INTRA
+        costs = [("flat", self._best_sw_allreduce_s(
+            nbytes, k * m_axis, flat_level, fidelity))]
+        if k > 1 and m_axis > 1:
+            intra = machine.cost_s(RingAllreduce(), k, nbytes,
+                                   fidelity=fidelity, level=INTRA)
+            shard = max(1, nbytes // k)
+            inter = self._best_sw_allreduce_s(shard, m_axis, INTER, fidelity)
+            costs.append(("hierarchical", intra + inter))
+            if allow_lossy:
+                mem_pass = getattr(machine, "memory_pass_s", lambda nb: 0.0)
+                wire = shard // 2 if m_axis <= 255 else shard
+                inter_q = self._best_sw_allreduce_s(max(1, wire), m_axis,
+                                                    INTER, fidelity)
+                costs.append(("compressed",
+                              intra + inter_q + 2.0 * mem_pass(shard)))
+        return self._pick("grad_sync", nbytes, participants, costs, fidelity)
+
+    # --------------------------------------------------------- thresholds
+    def eager_threshold_bytes(self, p: int, *, level: str = INTRA) -> int:
+        """Derived eager threshold: the message size below which the
+        one-shot (single-alpha, eager-analog) schedule is the *plan* — i.e.
+        it beats every other feasible software schedule.  The one-shot
+        per-byte slope (p-1)/bw dominates all candidates', so the winner
+        flips at most once and bisection applies."""
+        if p < 2:
+            return 1 << 32
+        alpha, bw = self.machine.alpha_beta(level)
+
+        def oneshot(n: int) -> float:
+            return oneshot_cost_s(n, p, bw, alpha)
+
+        def best_other(n: int) -> float:
+            try:
+                return self._best_sw_allreduce_s(
+                    n, p, level, "analytic", exclude=("oneshot", "accel"))
+            except ValueError:
+                return float("inf")
+
+        return crossover_bytes(oneshot, best_other)

@@ -11,6 +11,10 @@ EXPERIMENTS.md §Perf.
                      (the NI Allreduce accelerator schedule, §4.7)
 * ``compressed``   — int8-quantized hierarchical sync with error feedback
                      (gradient compression for the slow cross-pod hop)
+* ``auto``         — the CollectivePlanner picks one of the above per
+                     bucket by predicted cost on the policy's MachineModel
+                     (DESIGN.md §3.5); the choice happens at trace time on
+                     static byte counts, so it is jit-compatible
 
 Bucketing: gradients are packed into contiguous buckets sized by
 CommPolicy.bucket_bytes — the cell/MTU trade-off of §4.2: small enough to
@@ -20,6 +24,7 @@ overlap with backward compute, large enough to amortize alpha.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -55,29 +60,54 @@ def unflatten_from_buckets(buckets, spec):
 
 
 # --------------------------------------------------------------- strategies
+def plan_bucket_strategy(policy: CommPolicy, nbytes: int,
+                         axis_sizes: tuple[int, ...],
+                         allow_lossy: bool = False) -> str:
+    """Planner-chosen strategy for one bucket of ``nbytes`` over the given
+    DP axis sizes (intra first). Pure host-side: no jax, static ints only,
+    so ``strategy="auto"`` stays jit-traceable."""
+    intra = axis_sizes[0]
+    inter = axis_sizes[-1] if len(axis_sizes) > 1 else 1
+    return policy.plan_bucket(nbytes, intra, inter,
+                              allow_lossy=allow_lossy).schedule
+
+
 def sync_gradients(grads, mesh, *, strategy: str = "hierarchical",
                    intra_axis: str = "data", inter_axis: str | None = "pod",
-                   policy: CommPolicy | None = None, mean_over: int = 1):
-    """All-reduce a gradient pytree across DP axes (manual-DP path)."""
+                   policy: CommPolicy | None = None, mean_over: int = 1,
+                   allow_lossy: bool = False):
+    """All-reduce a gradient pytree across DP axes (manual-DP path).
+
+    ``allow_lossy`` only matters for ``strategy="auto"``: it decides
+    whether the planner may pick the int8-compressed sync (whose error
+    feedback is the caller's job — see :class:`CompressedSync`)."""
     from repro.core.collectives import flat_allreduce, hierarchical_allreduce
     policy = policy or CommPolicy()
     axes = tuple(a for a in (intra_axis, inter_axis)
                  if a and a in mesh.axis_names and mesh.shape[a] > 1)
     if not axes:
         return grads
-    buckets, spec = flatten_to_buckets(grads, policy.bucket_bytes(
-        int(jnp.prod(jnp.array([mesh.shape[a] for a in axes])))))
+    axis_sizes = tuple(int(mesh.shape[a]) for a in axes)
+    # DP world size is a host-side int; math.prod avoids the device
+    # round-trip a jnp.prod would force on every sync call
+    buckets, spec = flatten_to_buckets(
+        grads, policy.bucket_bytes(math.prod(axis_sizes)))
     out = []
     for b in buckets:
-        if strategy == "flat" or len(axes) == 1:
+        strat = strategy
+        if strategy == "auto":
+            strat = plan_bucket_strategy(
+                policy, int(b.size) * b.dtype.itemsize, axis_sizes,
+                allow_lossy)
+        if strat == "flat" or len(axes) == 1:
             r = flat_allreduce(b, mesh, axes)
-        elif strategy == "hierarchical":
+        elif strat == "hierarchical":
             r = hierarchical_allreduce(b, mesh, intra_axis=axes[0],
                                        inter_axis=axes[-1])
-        elif strategy == "compressed":
+        elif strat == "compressed":
             r = _compressed_allreduce(b, mesh, axes)
         else:
-            raise ValueError(strategy)
+            raise ValueError(strat)
         out.append(r / mean_over)
     return unflatten_from_buckets(out, spec)
 
@@ -102,7 +132,11 @@ def _compressed_allreduce(b, mesh, axes):
         scale = jnp.max(jnp.abs(shard)) / 127.0
         scale = jnp.maximum(scale, 1e-20)
         q = jnp.round(shard / scale).astype(jnp.int8)
-        qsum = jax.lax.psum(q.astype(jnp.int32), inter)
+        # int16 accumulation halves the cross-pod wire bytes and is exact
+        # while sum(|q|) <= 255 * 127 < 2^15; wider inter axes fall back to
+        # int32 (the planner's compressed cost model mirrors this cutoff)
+        acc = jnp.int16 if jax.lax.axis_size(inter) <= 255 else jnp.int32
+        qsum = jax.lax.psum(q.astype(acc), inter)
         ssum = jax.lax.psum(scale, inter) / jax.lax.axis_size(inter)
         shard = qsum.astype(jnp.float32) * ssum
         full = jax.lax.all_gather(shard, intra, axis=0, tiled=True)

@@ -8,6 +8,7 @@ so what compiles there is what trains here.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable
 
@@ -20,12 +21,16 @@ from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update)
 
 def make_train_step(model, opt_cfg: AdamWConfig, pctx=None,
                     microbatches: int = 1,
-                    accum_dtype=jnp.float32) -> Callable:
+                    accum_dtype=jnp.float32,
+                    sync_fn: Callable | None = None) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics). With ``microbatches > 1``, gradients accumulate over
     sequential microbatch slices (pipeline-friendly; lowers activation
     memory by the same factor). ``accum_dtype=bfloat16`` halves the
-    accumulator footprint for memory-floor configs (671B on one pod)."""
+    accumulator footprint for memory-floor configs (671B on one pod).
+    ``sync_fn`` (grads -> grads) runs after accumulation, before the
+    optimizer — the manual-DP gradient sync hook (see ``Trainer.make_step``
+    and ``parallel/grad_sync.sync_gradients``)."""
 
     def loss_fn(params, batch):
         return model.loss_fn(params, batch, pctx)
@@ -52,6 +57,8 @@ def make_train_step(model, opt_cfg: AdamWConfig, pctx=None,
                                             jnp.arange(microbatches))
             loss = loss / microbatches
             grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        if sync_fn is not None:
+            grads = sync_fn(grads)
         new_params, new_opt, metrics = adamw_update(grads, opt_state, params,
                                                     opt_cfg)
         metrics["loss"] = loss
@@ -62,17 +69,49 @@ def make_train_step(model, opt_cfg: AdamWConfig, pctx=None,
 
 @dataclasses.dataclass
 class Trainer:
-    """Minimal driver used by examples/ and the fault-tolerance tests."""
+    """Minimal driver used by examples/ and the fault-tolerance tests.
+
+    With ``mesh`` set, gradients are synchronized across the DP axes each
+    step via ``parallel/grad_sync.sync_gradients``; ``sync_strategy="auto"``
+    lets the CollectivePlanner pick the cheapest exact sync per bucket by
+    predicted cost (DESIGN.md §3.5). Lossy int8 compression is never chosen
+    silently — opt in with ``allow_lossy=True`` (and consider
+    ``CompressedSync`` for error feedback)."""
     model: Any
     opt_cfg: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
     pctx: Any = None
+    mesh: Any = None
+    sync_strategy: str = "auto"
+    allow_lossy: bool = False
 
     def init_state(self, key) -> dict:
         params = self.model.init(key)
         return {"params": params, "opt": adamw_init(params, self.opt_cfg)}
 
     def make_step(self, jit: bool = True) -> Callable:
-        step = make_train_step(self.model, self.opt_cfg, self.pctx)
+        sync_fn = None
+        if self.mesh is not None:
+            import math
+
+            from repro.parallel.grad_sync import sync_gradients
+            dp_axes = [a for a in ("data", "pod")
+                       if a in self.mesh.axis_names]
+            if not dp_axes:
+                raise ValueError(
+                    "Trainer(mesh=...) synchronizes over DP axes named "
+                    f"'data'/'pod' (DESIGN.md §5); mesh has "
+                    f"{self.mesh.axis_names} — rename the axes or call "
+                    "sync_gradients with explicit intra_axis/inter_axis")
+            # psum sums per-replica gradients; divide by the DP world size
+            # (the axes sync_gradients will reduce over) to get the mean
+            world = math.prod(self.mesh.shape[a] for a in dp_axes
+                              if self.mesh.shape[a] > 1)
+            sync_fn = functools.partial(sync_gradients, mesh=self.mesh,
+                                        strategy=self.sync_strategy,
+                                        mean_over=max(world, 1),
+                                        allow_lossy=self.allow_lossy)
+        step = make_train_step(self.model, self.opt_cfg, self.pctx,
+                               sync_fn=sync_fn)
 
         def fn(state, batch):
             p, o, m = step(state["params"], state["opt"], batch)

@@ -95,6 +95,51 @@ def test_commpolicy_crossover_consistent(p):
             pol.oneshot_allreduce_s(big, p, pol.ici_bw, pol.alpha_s) + 1e-12
 
 
+@given(st.integers(2, 4096))
+def test_eager_threshold_is_exact_crossover(p):
+    """The threshold is the *first* size where one-shot strictly loses to
+    ring — so it is the true crossover, and choose() is consistent with it
+    at both boundary sides."""
+    from repro.core.comm import CommPolicy
+    pol = CommPolicy()
+    thr = pol.eager_threshold_bytes(p)
+    if thr >= 1 << 31:  # one-shot wins at every size (p=2,3: no crossover)
+        return
+    one = lambda n: pol.oneshot_allreduce_s(n, p, pol.ici_bw, pol.alpha_s)
+    ring = lambda n: pol.ring_allreduce_s(n, p, pol.ici_bw, pol.alpha_s)
+    assert one(thr) > ring(thr)
+    if thr > 1:
+        assert one(thr - 1) <= ring(thr - 1)
+    assert pol.choose(thr, p) == "eager"
+    assert pol.choose(thr + 1, p) == "rendezvous"
+
+
+@given(st.integers(4, 1024),
+       st.floats(1e-7, 5e-5), st.floats(1.0, 50.0))
+def test_eager_threshold_monotone_in_alpha(p, alpha, factor):
+    """Raising alpha raises the threshold: ring pays 2(p-1) alphas vs the
+    one-shot's single alpha, so a slower launch path extends the eager
+    regime (the paper's reasoning for keeping the packetizer, §5.2.1)."""
+    from repro.core.comm import CommPolicy
+    lo = CommPolicy(alpha_s=alpha)
+    hi = CommPolicy(alpha_s=alpha * factor)
+    assert hi.eager_threshold_bytes(p) >= lo.eager_threshold_bytes(p)
+
+
+@given(st.integers(1, 1 << 24), st.integers(2, 64), st.integers(1, 8))
+def test_planner_cache_deterministic(nbytes, intra, inter):
+    """Plan-cache lookups are deterministic: repeated queries return the
+    memoized object, and an independent planner derives the same plan."""
+    from repro.core.comm import CommPolicy
+    a_pol, b_pol = CommPolicy(), CommPolicy()
+    a = a_pol.planner.plan("grad_sync", nbytes, (intra, inter))
+    b = b_pol.planner.plan("grad_sync", nbytes, (intra, inter))
+    assert (a.schedule, a.cost_s, a.costs) == (b.schedule, b.cost_s, b.costs)
+    again = a_pol.planner.plan("grad_sync", nbytes, (intra, inter))
+    assert again is a
+    assert a_pol.planner.cache_info()["hits"] >= 1
+
+
 # ------------------------------------------------------------- grad sync
 @given(st.lists(st.integers(1, 300), min_size=1, max_size=5),
        st.integers(10, 10_000))
