@@ -1,15 +1,26 @@
 """Micro-benchmark: simulated collective throughput across rank counts.
 
-Times event-simulated broadcast + allreduce at 16-256 ranks, with the route
-cache / engine path table ON (the refactored default) and OFF (the
-pre-refactor per-send ``route()`` recomputation), and writes
-``BENCH_collectives.json`` with sends/sec and wall time so the speedup is
-tracked in the perf trajectory.
+Two perf trajectories in one artifact (``BENCH_collectives.json``):
+
+* **route-cache rows** (PR 1 metric, unchanged): event-simulated broadcast
+  + allreduce at 16-256 ranks with the route cache / engine path table ON
+  vs OFF, on the default (4 ranks/MPSoC) placement.
+
+* **sweep rows** (PR 3 metric): the paper-style sweep workload — one
+  collective replayed over the full OSU message-size grid (1 B..4 MB,
+  powers of two, Figs. 14-19) — interpreted per size vs replayed as ONE
+  compiled round program (``run_schedule_many``), with 1 rank/MPSoC
+  placement (§6.1.4/6.1.5) on a torus scaled to fit
+  (``scaled_params``).  Includes 1024- and 4096-rank rows that were
+  impractical to sweep before the compiled backend (the interpreter is
+  sampled on a size subgrid there and compared by sends/sec rate).
 
 Run: PYTHONPATH=src python benchmarks/collectives_sweep.py [--smoke]
 
-``--smoke`` (used by the CI benchmark step) drops the 256-rank sweep and
-shortens the timed windows so perf artifacts stay fresh without slowing CI.
+``--smoke`` (used by the CI benchmark step) drops the 256+-rank sweeps and
+shortens the timed windows so perf artifacts stay fresh without slowing
+CI; it still exercises the compiled backend end to end and fails loudly
+if compiled and interpreted latencies ever disagree.
 """
 
 from __future__ import annotations
@@ -22,13 +33,29 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.exanet import ExanetMPI  # noqa: E402
+from repro.core.exanet.params import DEFAULT, scaled_params  # noqa: E402
+from repro.core.exanet.schedules import (BinomialBroadcast,  # noqa: E402
+                                         RecursiveDoublingAllreduce)
 
 RANKS = (16, 64, 256)
-#: (collective, payload bytes, sends per run at n ranks)
+#: (collective, payload bytes, sends per run at n ranks) — route-cache rows
 CASES = (
     ("bcast", 1, lambda n: n - 1),
     ("bcast", 4096, lambda n: n - 1),
     ("allreduce", 4096, lambda n: n * (n.bit_length() - 1)),
+)
+
+#: the OSU-style message-size grid (Figs. 14-19): 1 B .. 4 MB powers of 2
+SWEEP_SIZES = tuple(1 << i for i in range(23))
+#: interpreter subgrid for the paper-scale rows (full-grid interpretation
+#: at 4096 ranks takes minutes; sends/sec is compared as a rate)
+BIG_RANK_INTERP_SIZES = (1, 32, 1024, 32768, 1 << 20, 4 << 20)
+SWEEP_RANKS = (16, 64, 256)
+BIG_SWEEP_RANKS = (1024, 4096)
+SWEEP_SCHEDULES = (
+    ("bcast", BinomialBroadcast, lambda n: n - 1),
+    ("allreduce", RecursiveDoublingAllreduce,
+     lambda n: n * (n.bit_length() - 1)),
 )
 
 
@@ -48,6 +75,7 @@ def _time_runs(mpi: ExanetMPI, coll: str, size: int, nranks: int,
 
 
 def sweep(ranks: tuple[int, ...], min_wall_s: float) -> dict:
+    """PR-1 route-cache rows (cached vs uncached interpreter)."""
     results = []
     for coll, size, sends_per_run in CASES:
         for n in ranks:
@@ -76,14 +104,102 @@ def sweep(ranks: tuple[int, ...], min_wall_s: float) -> dict:
     return out
 
 
+def _interp_grid(mpi, sched, sizes, nranks, min_wall_s):
+    """sends/sec interpreting one collective per size over a grid."""
+    for s in sizes[:1]:
+        mpi.run_schedule(sched, s, nranks, backend="interp")  # warm routes
+    runs, wall = 0, 0.0
+    t0 = time.perf_counter()
+    while wall < min_wall_s:
+        for s in sizes:
+            mpi.run_schedule(sched, s, nranks, backend="interp")
+        runs += 1
+        wall = time.perf_counter() - t0
+    return wall, runs
+
+
+def _compiled_grid(mpi, sched, sizes, nranks, min_wall_s):
+    """sends/sec replaying one compiled program over the whole grid."""
+    mpi.run_schedule_many(sched, sizes, nranks)  # compile + bind once
+    runs, wall = 0, 0.0
+    t0 = time.perf_counter()
+    while wall < min_wall_s:
+        mpi.run_schedule_many(sched, sizes, nranks)
+        runs += 1
+        wall = time.perf_counter() - t0
+    return wall, runs
+
+
+def compiled_sweep(ranks, big_ranks, min_wall_s) -> list[dict]:
+    """PR-3 rows: compiled vs interpreted over the message-size sweep."""
+    rows = []
+    for coll, sched_cls, sends_per_run in SWEEP_SCHEDULES:
+        for n in tuple(ranks) + tuple(big_ranks):
+            sched = sched_cls()
+            # 1 rank/MPSoC (§6.1.4/6.1.5 placement): rank r sits on core
+            # r * cores_per_mpsoc; scale the torus when the 512-core
+            # prototype cannot hold the ranks
+            p = scaled_params((n - 1) * DEFAULT.cores_per_mpsoc + 1)
+            mpi = ExanetMPI(p, ranks_per_mpsoc=1)
+            interp_sizes = SWEEP_SIZES if n in ranks else \
+                BIG_RANK_INTERP_SIZES
+            iw, ir = _interp_grid(mpi, sched, interp_sizes, n,
+                                  min_wall_s)
+            cw, cr = _compiled_grid(mpi, sched, SWEEP_SIZES, n,
+                                    min_wall_s)
+            # equal-latency guard: the two backends must agree (~1e-9)
+            batch = mpi.run_schedule_many(sched, SWEEP_SIZES, n)
+            probe = [SWEEP_SIZES[0], SWEEP_SIZES[len(SWEEP_SIZES) // 2],
+                     SWEEP_SIZES[-1]]
+            for s in probe:
+                a = mpi.run_schedule(sched, s, n, backend="interp")
+                b = float(batch.latency_us[SWEEP_SIZES.index(s)])
+                if abs(a.latency_us - b) > 1e-9 * a.latency_us:
+                    raise AssertionError(
+                        f"backend disagreement: {coll} N={n} size={s}: "
+                        f"interp {a.latency_us} vs compiled {b}")
+            i_rate = sends_per_run(n) * len(interp_sizes) * ir / iw
+            c_rate = sends_per_run(n) * len(SWEEP_SIZES) * cr / cw
+            row = {"collective": coll, "nranks": n,
+                   "grid_sizes": len(SWEEP_SIZES),
+                   "interp": {"wall_s": round(iw, 4), "runs": ir,
+                              "grid_sizes": len(interp_sizes),
+                              "sends_per_sec": round(i_rate, 1)},
+                   "compiled": {"wall_s": round(cw, 4), "runs": cr,
+                                "sends_per_sec": round(c_rate, 1)},
+                   "speedup_compiled": round(c_rate / i_rate, 2)}
+            rows.append(row)
+            print(f"{coll:9s} sweep N={n:4d}  "
+                  f"interp={i_rate:>11.0f} sends/s  "
+                  f"compiled={c_rate:>12.0f}  "
+                  f"speedup={row['speedup_compiled']:.2f}x")
+    return rows
+
+
 def main(out_path: str = "BENCH_collectives.json", smoke: bool = False) -> None:
     ranks = RANKS[:-1] if smoke else RANKS
     out = sweep(ranks, min_wall_s=0.05 if smoke else 0.2)
+    sweep_ranks = SWEEP_RANKS[:-1] if smoke else SWEEP_RANKS
+    big_ranks = () if smoke else BIG_SWEEP_RANKS
+    rows = compiled_sweep(sweep_ranks, big_ranks,
+                          min_wall_s=0.05 if smoke else 0.5)
+    out["sweep_sizes"] = [int(s) for s in SWEEP_SIZES]
+    out["sweep_results"] = rows
+    if not smoke:
+        at_256 = [r["speedup_compiled"] for r in rows if r["nranks"] == 256]
+        out["compiled_speedup_at_256_ranks"] = {"min": min(at_256),
+                                                "max": max(at_256)}
+        out["compiled_max_ranks"] = max(r["nranks"] for r in rows)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     s = out["speedup_at_top_ranks"]
     print(f"\nwrote {out_path}; route-cache speedup at {out['top_ranks']} "
           f"ranks: {s['min']:.2f}x-{s['max']:.2f}x")
+    if not smoke:
+        c = out["compiled_speedup_at_256_ranks"]
+        print(f"compiled-vs-interp sweep speedup at 256 ranks: "
+              f"{c['min']:.2f}x-{c['max']:.2f}x "
+              f"(max swept ranks: {out['compiled_max_ranks']})")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,10 @@ Two sections, written to ``BENCH_planner.json``:
   event-simulation fidelity: per vector size, the planner's choice and the
   cost-derived crossover size (the paper's Fig. 19 reproduced from cost
   alone, no hand-coded 4 KB threshold).
+* **exanet_plan_many** — sim-fidelity cold planning over a message-size
+  grid: ``plan_many`` (one compiled round program per candidate schedule
+  serves the whole grid, PR 3) vs scalar ``plan`` per size, plus the warm
+  (plan-cache) rate.
 
 Run: PYTHONPATH=src python benchmarks/planner_sweep.py [--smoke]
 """
@@ -106,11 +110,38 @@ def exanet_fig19_section(nranks_list: tuple[int, ...]) -> dict:
     return out
 
 
+def exanet_plan_many_section(nranks: int, n_sizes: int) -> dict:
+    """Cold sim-fidelity planning over a size grid, batched vs scalar."""
+    sizes = [1 << i for i in range(n_sizes)]
+    batched = CollectivePlanner(ExanetMachine(), fidelity="sim")
+    t0 = time.perf_counter()
+    plans = batched.plan_many("allreduce", sizes, (nranks,))
+    t_batch = time.perf_counter() - t0
+    scalar = CollectivePlanner(ExanetMachine(), fidelity="sim")
+    t0 = time.perf_counter()
+    for s in sizes:
+        scalar.plan("allreduce", s, (nranks,))
+    t_scalar = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batched.plan_many("allreduce", sizes, (nranks,))
+    t_warm = time.perf_counter() - t0
+    return {
+        "nranks": nranks, "grid_sizes": len(sizes),
+        "cold_batched_plans_per_sec": round(len(sizes) / t_batch, 1),
+        "cold_scalar_plans_per_sec": round(len(sizes) / t_scalar, 1),
+        "warm_batched_plans_per_sec": round(len(sizes) / t_warm, 1),
+        "cold_speedup_x": round(t_scalar / t_batch, 2),
+        "chosen": {str(s): p.schedule for s, p in zip(sizes, plans)},
+    }
+
+
 def main(out_path: str = "BENCH_planner.json", smoke: bool = False) -> None:
     repeats = 2 if smoke else 5
     nranks = (16, 64) if smoke else (16, 64, 128)
     out = {"tpu_grad_sync": tpu_grad_sync_section(repeats),
-           "exanet_fig19": exanet_fig19_section(nranks)}
+           "exanet_fig19": exanet_fig19_section(nranks),
+           "exanet_plan_many": exanet_plan_many_section(
+               16 if smoke else 64, 12 if smoke else 21)}
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     g = out["tpu_grad_sync"]
@@ -124,6 +155,12 @@ def main(out_path: str = "BENCH_planner.json", smoke: bool = False) -> None:
     for n, sec in out["exanet_fig19"].items():
         print(f"exanet N={n}: cost-derived sw/accel crossover at "
               f"{sec['crossover_bytes_cost_derived']} B")
+    pm = out["exanet_plan_many"]
+    print(f"plan_many N={pm['nranks']} over {pm['grid_sizes']} sizes: "
+          f"{pm['cold_batched_plans_per_sec']:.0f} cold-batched vs "
+          f"{pm['cold_scalar_plans_per_sec']:.0f} cold-scalar plans/s "
+          f"({pm['cold_speedup_x']:.2f}x), "
+          f"{pm['warm_batched_plans_per_sec']:.0f} warm")
     print(f"wrote {out_path}")
     assert g["cost_reduction_x"] >= 2.0, "planner must beat always-flat 2x"
 

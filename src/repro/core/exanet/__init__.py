@@ -6,19 +6,23 @@ TPU-native adaptation of the same ideas lives in :mod:`repro.core.collectives`
 and :mod:`repro.parallel`.
 """
 
-from repro.core.exanet.params import DEFAULT, HwParams
+from repro.core.exanet.params import DEFAULT, HwParams, scaled_params
 from repro.core.exanet.topology import Topology, Path
 from repro.core.exanet.sim import Engine, Resource, TraceEvent
 from repro.core.exanet.network import Network
 from repro.core.exanet.schedules import (CollectiveSchedule, Round,
                                          alpha_beta_cost_s)
+from repro.core.exanet.exec_compiled import (BatchScheduleResult,
+                                             ProgramStructureError,
+                                             RoundProgram)
 from repro.core.exanet.mpi import ExanetMPI, BcastResult, ScheduleResult
 from repro.core.exanet.allreduce_accel import (accel_allreduce_latency,
                                                accel_applicable)
 
 __all__ = [
-    "DEFAULT", "HwParams", "Topology", "Path", "Engine", "Resource",
-    "TraceEvent", "Network", "CollectiveSchedule", "Round",
-    "alpha_beta_cost_s", "ExanetMPI", "BcastResult", "ScheduleResult",
+    "DEFAULT", "HwParams", "scaled_params", "Topology", "Path", "Engine",
+    "Resource", "TraceEvent", "Network", "CollectiveSchedule", "Round",
+    "alpha_beta_cost_s", "BatchScheduleResult", "ProgramStructureError",
+    "RoundProgram", "ExanetMPI", "BcastResult", "ScheduleResult",
     "accel_allreduce_latency", "accel_applicable",
 ]

@@ -22,6 +22,10 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.exanet import sim
+from repro.core.exanet.exec_compiled import (BatchScheduleResult,
+                                             ProgramStructureError,
+                                             compile_program,
+                                             round_parallelism)
 from repro.core.exanet.network import Network
 from repro.core.exanet.params import DEFAULT, HwParams
 from repro.core.exanet.schedules import (ALLREDUCE_SCHEDULES, AllGather,
@@ -88,6 +92,22 @@ class ExanetMPI:
             cores = cache[nranks] = [self.rank_core(r) for r in range(nranks)]
         return cores
 
+    def _r5s(self, nranks: int) -> list:
+        """Rank -> R5 :class:`Resource` of its MPSoC, cached per rank count
+        (rendez-vous exchange rounds charge the end-to-end ACK on it every
+        collective; the engine zeroes occupancy in place on reset, so the
+        objects stay valid across runs)."""
+        cache = getattr(self, "_r5s_cache", None)
+        if cache is None:
+            cache = self._r5s_cache = {}
+        r5s = cache.get(nranks)
+        if r5s is None:
+            engine = self.net.engine
+            r5s = cache[nranks] = [
+                engine.resource(sim.R5, self.topo.core_to_mpsoc(c))
+                for c in self._cores(nranks)]
+        return r5s
+
     def _rank_path(self, r0: int, r1: int | None) -> Path:
         """Route between two ranks; ``r1=None`` means the default
         intra-QFDB neighbour used by the OSU pair benchmarks."""
@@ -126,8 +146,13 @@ class ExanetMPI:
             self.p.a53_call_overhead_us
 
     # --------------------------------------------------------- the executor
+    #: ``backend="auto"`` compiles once the interpreter's per-send Python
+    #: overhead dominates; below this rank count a single-size replay is
+    #: cheaper interpreted (batched sweeps always compile).
+    COMPILED_AUTO_MIN_RANKS = 512
+
     def run_schedule(self, sched: CollectiveSchedule, size: int,
-                     nranks: int) -> ScheduleResult:
+                     nranks: int, *, backend: str = "auto") -> ScheduleResult:
         """Replay a schedule's rounds on the event engine.
 
         One-way rounds relay data down a tree (receiver clock = arrival,
@@ -135,7 +160,34 @@ class ExanetMPI:
         MPI_Sendrecv semantics: both directions must complete (plus the
         rendez-vous end-to-end-ACK R5 charge on each sender's MPSoC,
         §4.5.2) before the per-round software penalty and local reduction.
+
+        ``backend`` selects the executor: ``"interp"`` (this method's
+        per-send loop — the reference semantics), ``"compiled"`` (the
+        vectorized round programs of
+        :mod:`repro.core.exanet.exec_compiled`, equal to ~1e-9), or
+        ``"auto"`` (compiled at paper scale / for batched sweeps, where
+        the interpreter is Python-bound; interpreted otherwise, and always
+        when tracing is on — the compiled path records no trace).
         """
+        if backend not in ("auto", "interp", "compiled"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"options: ['auto', 'compiled', 'interp']")
+        auto = backend == "auto"
+        if auto:
+            backend = "compiled" if (
+                not self.net.engine.tracing
+                and nranks >= self.COMPILED_AUTO_MIN_RANKS
+                and self.compiled_profitable(sched, nranks)) else "interp"
+        if backend == "compiled":
+            try:
+                batch = self.run_schedule_many(sched, (size,), nranks)
+            except ProgramStructureError:
+                if not auto:
+                    raise
+            else:
+                return ScheduleResult(float(batch.latency_us[0]),
+                                      [float(c) for c in batch.clocks[0]],
+                                      batch.round_heads)
         p = self.p
         net = self.net
         send = net._send
@@ -144,7 +196,7 @@ class ExanetMPI:
         r5_occ = p.r5_occupancy_us
         net.reset()
         cores = self._cores(nranks)
-        r5s = None  # per-rank R5 resources, built lazily (rdv rounds only)
+        r5s = None  # per-rank R5 resources, bound on first rdv round
         clocks = [self._copy_us(sched.pre_copy_bytes(size))] * nranks
         # per-step sync skew (§6.1.4 noise stand-in) hits every rank equally,
         # so it is tracked as one running offset instead of N list writes;
@@ -165,15 +217,16 @@ class ExanetMPI:
                                                  clocks[s] + skew, one_way)
                     if complete > arrivals[d]:
                         arrivals[d] = complete
-                    done[s] = sender_free
+                    # a rank sending twice in one round waits for both
+                    # sends (max, not last-write-wins)
+                    if sender_free > done[s]:
+                        done[s] = sender_free
                 if rdv:
                     # end-to-end ACK processing is a second R5 invocation on
                     # the sender's MPSoC (§4.5.2) and serializes with other
                     # channels.
                     if r5s is None:
-                        r5s = [net.engine.resource(
-                            sim.R5, self.topo.core_to_mpsoc(c))
-                            for c in cores]
+                        r5s = self._r5s(nranks)
                     for (s, _, _) in sends:
                         done[s] = r5s[s].acquire(done[s], r5_occ) + r5_occ
                 penalty = p.sendrecv_sw_rdv_us if rdv else \
@@ -203,6 +256,75 @@ class ExanetMPI:
         total = max(clocks) + skew + \
             self._copy_us(sched.post_copy_bytes(size)) + p.barrier_exit_us
         return ScheduleResult(total, [c + skew for c in clocks], round_heads)
+
+    # ------------------------------------------------- compiled batch runs
+    #: minimum mean sends-per-level before ``auto`` / ``cost_many`` pick
+    #: the compiled backend: below this a schedule's rounds are serial
+    #: chains the array executor cannot amortize (see round_parallelism)
+    COMPILED_MIN_PARALLELISM = 8.0
+
+    @staticmethod
+    def _schedule_cache_key(sched: CollectiveSchedule, nranks: int):
+        """Cache key of a (schedule, nranks) pair, or None when the
+        schedule must not share cached artifacts: the key is the
+        schedule's ``program_key()`` when it defines one, else its *type*
+        — but only for instances without per-instance state (every
+        shipped schedule: their structure depends only on nranks).  Two
+        differently-parameterized instances of one stateful class must
+        not share a lowered program or a profitability verdict."""
+        key_fn = getattr(sched, "program_key", None)
+        if key_fn is not None:
+            return (key_fn(), nranks)
+        if not getattr(sched, "__dict__", True):
+            return (type(sched), nranks)
+        return None
+
+    def compiled_profitable(self, sched: CollectiveSchedule,
+                            nranks: int) -> bool:
+        """Would the compiled backend beat the interpreter on this
+        schedule shape?  Cached under the same keying rule as
+        :meth:`compiled_program`."""
+        cache = getattr(self, "_parallelism_cache", None)
+        if cache is None:
+            cache = self._parallelism_cache = {}
+        key = self._schedule_cache_key(sched, nranks)
+        par = None if key is None else cache.get(key)
+        if par is None:
+            par = round_parallelism(self.net, sched, self._cores(nranks),
+                                    nranks)
+            if key is not None:
+                cache[key] = par
+        return par >= self.COMPILED_MIN_PARALLELISM
+
+    def compiled_program(self, sched: CollectiveSchedule, nranks: int):
+        """The cached :class:`RoundProgram` of a (schedule, nranks) pair
+        (see :meth:`_schedule_cache_key`; stateful schedules without a
+        ``program_key`` compile fresh each call)."""
+        cache = getattr(self, "_program_cache", None)
+        if cache is None:
+            cache = self._program_cache = {}
+        key = self._schedule_cache_key(sched, nranks)
+        prog = None if key is None else cache.get(key)
+        if prog is None:
+            prog = compile_program(self.net, sched, self._cores(nranks),
+                                   nranks)
+            if key is not None:
+                cache[key] = prog
+        return prog
+
+    def run_schedule_many(self, sched: CollectiveSchedule, sizes,
+                          nranks: int) -> BatchScheduleResult:
+        """Replay one compiled program over a whole message-size grid in a
+        single batched run — the sweep workload (algorithm x size x scale,
+        Figs. 14-19) that makes the compiled backend >=10x faster than
+        interpreting each size.  Raises :class:`ProgramStructureError` if
+        the schedule's round structure varies with size (no shipped
+        schedule does)."""
+        if self.net.engine.tracing:
+            raise ValueError("compiled backend records no per-send trace; "
+                             "use backend='interp' (or trace=False)")
+        prog = self.compiled_program(sched, nranks)
+        return prog.run(sched, sizes)
 
     def _step_class(self, src: int, dst: int) -> str:
         d = abs(dst - src) * (self.p.cores_per_mpsoc if self._rpm == 1 else 1)

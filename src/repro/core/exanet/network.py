@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from repro.core.exanet import sim
 from repro.core.exanet.params import DEFAULT, HwParams
 from repro.core.exanet.sim import Engine, PathMetrics, TraceEvent
@@ -210,6 +212,42 @@ class Network:
             link_res=tuple(eng.resource(sim.LINK, l.key) for l in path.links),
         )
         return self.engine.register_metrics(m)
+
+    def path_metrics_arrays(self, pairs) -> dict:
+        """Per-path constants of many (src_core, dst_core) pairs in array
+        form — the compile-time half of the compiled executor (DESIGN.md
+        §2.5).  Physical constants come from the same :class:`PathMetrics`
+        table the interpreter uses; shared resources are named by
+        :meth:`Engine.resource_id` so both backends serialize on the same
+        units.  ``dma_dst_id`` is -1 for intra-MPSoC loopback; ``link_ids``
+        is -1-padded to the longest path in the batch."""
+        ms = [self.path_metrics(s, d) for (s, d) in pairs]
+        n = len(ms)
+        rid = self.engine.resource_id
+        max_links = max((len(m.link_res) for m in ms), default=0)
+        link_ids = np.full((n, max_links), -1, dtype=np.int64)
+        for i, m in enumerate(ms):
+            for k, l in enumerate(m.path.links):
+                link_ids[i, k] = rid(sim.LINK, l.key)
+        return {
+            "hop_latency_us": np.array([m.hop_latency_us for m in ms]),
+            "eager_wire_us_per_byte": np.array(
+                [m.eager_wire_us_per_byte for m in ms]),
+            "eager_pp_const_us": np.array([m.eager_pp_const_us for m in ms]),
+            "eager_ow_const_us": np.array([m.eager_ow_const_us for m in ms]),
+            "handshake_pp_us": np.array([m.handshake_pp_us for m in ms]),
+            "handshake_ow_us": np.array([m.handshake_ow_us for m in ms]),
+            "stream_us_per_byte": np.array(
+                [m.stream_us_per_byte for m in ms]),
+            "pktz_id": np.array([rid(sim.PKTZ, m.src_mpsoc) for m in ms]),
+            "r5_id": np.array([rid(sim.R5, m.src_mpsoc) for m in ms]),
+            "dma_src_id": np.array([rid(sim.DMA, m.src_mpsoc) for m in ms]),
+            "dma_dst_id": np.array(
+                [rid(sim.DMA, m.dst_mpsoc) if m.dma_dst is not None else -1
+                 for m in ms]),
+            "link_ids": link_ids,
+            "n_links": np.array([len(m.link_res) for m in ms]),
+        }
 
     # ----------------------------------------------------- event-based sends
     def send(self, src_core: int, dst_core: int, size: int, t: float,

@@ -142,12 +142,22 @@ class HwParams:
     fpgas_per_qfdb: int = 4
     qfdbs_per_mezzanine: int = 4
     mezzanines: int = 8  # full-scale prototype: 8 blades = 512 cores (§4.1)
+    #: Y-ring size of the mezzanine-level torus; the Z ring is
+    #: ``mezzanines // mezz_torus_y`` (the prototype is 4 x 4 x 2, §4.1).
+    #: Paper-scale sweeps ("tens of thousands of processors", §1) grow the
+    #: torus via :func:`scaled_params` while keeping every calibrated
+    #: per-component constant untouched.
+    mezz_torus_y: int = 4
 
     @property
     def cell_efficiency(self) -> float:
         """16 words payload / 18 words on the wire (§4.2)."""
         p, o = self.cell_payload_bytes, self.cell_overhead_bytes
         return p / float(p + o)
+
+    @property
+    def mezz_torus_z(self) -> int:
+        return self.mezzanines // self.mezz_torus_y
 
     @property
     def n_qfdbs(self) -> int:
@@ -163,3 +173,22 @@ class HwParams:
 
 
 DEFAULT = HwParams()
+
+
+def scaled_params(min_cores: int, base: HwParams = DEFAULT) -> HwParams:
+    """A machine with the prototype's calibrated constants but a mezzanine
+    torus grown (Y/Z rings doubled alternately from the 4x4x2 baseline)
+    until it holds at least ``min_cores`` A53 cores.  This is how the
+    paper-scale sweeps (1024/4096+ ranks) get a consistent topology: the
+    prototype's 8 blades cap out at 512 cores."""
+    if min_cores <= base.n_cores:
+        return base
+    cores_per_mezz = (base.cores_per_mpsoc * base.fpgas_per_qfdb
+                      * base.qfdbs_per_mezzanine)
+    y, z = base.mezz_torus_y, base.mezz_torus_z
+    while y * z * cores_per_mezz < min_cores:
+        if y <= z:
+            y *= 2
+        else:
+            z *= 2
+    return dataclasses.replace(base, mezzanines=y * z, mezz_torus_y=y)

@@ -15,11 +15,24 @@ that bookkeeping into a proper engine:
 
 The closed-form latency/bandwidth math stays in ``network.py``; the engine
 is the substrate it runs on.
+
+Two execution backends share this substrate (DESIGN.md §2.5):
+
+* the **interpreter** (:meth:`ExanetMPI.run_schedule`) drives
+  :class:`Resource` objects one ``acquire`` at a time — the reference
+  semantics;
+* the **compiled executor** (:mod:`repro.core.exanet.exec_compiled`)
+  replays pre-lowered round programs against :class:`ResourceState` —
+  array-backed ``free_at`` rows addressed by :meth:`Engine.resource_id` —
+  using :func:`segmented_maxplus_scan` to serialize contending sends with
+  ``maximum``-scan arithmetic instead of per-send Python calls.
 """
 
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 from repro.core.exanet.topology import Path
 
@@ -100,6 +113,7 @@ class Engine:
         self.tracing = trace
         self.cache_paths = cache_paths
         self._resources: dict[tuple, Resource] = {}
+        self._resource_ids: dict[tuple, int] = {}
         self.path_table: dict[tuple[int, int], PathMetrics] = {}
         self.trace: list[TraceEvent] = []
 
@@ -110,6 +124,21 @@ class Engine:
         if r is None:
             r = self._resources[key] = Resource(key)
         return r
+
+    def resource_id(self, kind: str, ident) -> int:
+        """Stable dense integer id of a resource.  Compiled round programs
+        index :class:`ResourceState` rows by these ids; the interpreter's
+        :class:`Resource` objects are untouched, so both backends can name
+        the same physical unit."""
+        key = (kind, ident)
+        rid = self._resource_ids.get(key)
+        if rid is None:
+            rid = self._resource_ids[key] = len(self._resource_ids)
+        return rid
+
+    @property
+    def n_resource_ids(self) -> int:
+        return len(self._resource_ids)
 
     def reset(self) -> None:
         # zero in place (don't clear): PathMetrics entries hold direct
@@ -149,3 +178,96 @@ class Engine:
         return {k: {"busy_us": r.busy_us, "n_acquires": r.n_acquires,
                     "free_at": r.free_at}
                 for k, r in self._resources.items()}
+
+
+# ---------------------------------------------------------------------------
+# Array-backed resource state (the compiled executor's substrate)
+# ---------------------------------------------------------------------------
+class ResourceState:
+    """Vectorized ``free_at`` bookkeeping: one row per engine resource id
+    (:meth:`Engine.resource_id`), one column per batched message size.
+
+    The compiled executor replays a whole round program against one state;
+    a run starts from all-zero occupancy, exactly like ``Engine.reset()``.
+    """
+
+    __slots__ = ("free",)
+
+    def __init__(self, n_resources: int, batch: int):
+        self.free = np.zeros((n_resources, batch))
+
+    def acquire_unique(self, rows: np.ndarray, t: np.ndarray,
+                       dur) -> np.ndarray:
+        """Acquire resources ``rows`` (no row repeated) from times ``t``
+        for ``dur``; returns the start times (``maximum(t, free)``)."""
+        free = self.free[rows]
+        start = np.maximum(t, free)
+        self.free[rows] = start + dur
+        return start
+
+    def acquire_unique_masked(self, rows: np.ndarray, t: np.ndarray, dur,
+                              active: np.ndarray) -> np.ndarray:
+        """Like :meth:`acquire_unique`, but only batch elements where
+        ``active`` advance the resource (an eager send never touches the
+        R5/DMA rows its rendez-vous twin would)."""
+        free = self.free[rows]
+        start = np.maximum(t, free)
+        self.free[rows] = np.where(active, start + dur, free)
+        return start
+
+
+def scan_take_masks(first: np.ndarray, max_group: int) -> list:
+    """Precomputed per-pass combine masks of a segmented Hillis-Steele
+    scan.  The flag evolution is data-independent, so a compiled program
+    pays for it once per (schedule, nranks) instead of per run."""
+    F = np.array(first, copy=True)
+    takes = []
+    s = 1
+    while s < max_group:
+        takes.append((s, (~F[s:])[:, None]))
+        F[s:] |= F[:-s]
+        s *= 2
+    return takes
+
+
+def segmented_maxplus_scan(dur: np.ndarray, t_plus_dur: np.ndarray,
+                           first: np.ndarray, max_group: int,
+                           *, takes: list | None = None, copy: bool = True
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Inclusive segmented scan of serially-reusable acquisitions.
+
+    One acquire is the max-plus affine map ``g(f) = max(f + D, T)`` of the
+    resource's free time ``f``, with ``D`` the busy duration and
+    ``T = t + D`` (an inactive acquire is the identity: ``D=0, T=-inf``).
+    Composition is associative — ``(D1,T1) then (D2,T2)`` is
+    ``(D1+D2, max(T1+D2, T2))`` — so serialization of every contention
+    group resolves in ``ceil(log2(max_group))`` Hillis-Steele passes of
+    plain array arithmetic instead of a Python loop over sends.
+
+    ``dur``/``t_plus_dur`` are (k, B) acquire arrays laid out so each
+    resource's acquires are contiguous and in send order; ``first`` is the
+    (k,) segment-start mask.  Returns ``(Dacc, Tacc)`` such that the
+    resource is next free at ``maximum(F0 + Dacc_i, Tacc_i)`` after its
+    i-th acquire, where ``F0`` is the segment's initial free time.
+    ``takes`` (from :func:`scan_take_masks`) skips recomputing the flag
+    evolution; ``copy=False`` lets the scan clobber its inputs.
+    """
+    D = np.array(dur, copy=True) if copy else dur
+    T = np.array(t_plus_dur, copy=True) if copy else t_plus_dur
+    if takes is None:
+        takes = scan_take_masks(first, max_group)
+    for s, mask in takes:
+        T[s:] = np.where(mask, np.maximum(T[:-s] + D[s:], T[s:]), T[s:])
+        D[s:] = np.where(mask, D[:-s] + D[s:], D[s:])
+    return D, T
+
+
+def segmented_running_max(v: np.ndarray, takes: list) -> np.ndarray:
+    """In-place segmented running maximum (the scalar-duration fast path:
+    with a group-constant duration ``d``, the serialization recurrence
+    collapses to ``f_after_i = (k_i+1) d + max(F0, max_j<=i (t_j - k_j d))``
+    — one plain-max scan over ``v = t - k d`` instead of the (D, T)
+    composition)."""
+    for s, mask in takes:
+        v[s:] = np.where(mask, np.maximum(v[:-s], v[s:]), v[s:])
+    return v

@@ -84,6 +84,14 @@ class Topology:
         self.fpgas_per_qfdb = params.fpgas_per_qfdb
         self.qfdbs_per_mezz = params.qfdbs_per_mezzanine
         self.mezzanines = params.mezzanines
+        #: mezzanine-level torus ring sizes (prototype: X=4 QFDBs/blade,
+        #: Y=4 blades/group, Z=2 groups; paper-scale params grow Y/Z)
+        self.mezz_y = params.mezz_torus_y
+        self.mezz_z = params.mezz_torus_z
+        if self.mezz_y * self.mezz_z != self.mezzanines:
+            raise ValueError(
+                f"mezzanines={self.mezzanines} is not mezz_torus_y="
+                f"{self.mezz_y} x {self.mezz_z} torus rings")
         self.n_cores = params.n_cores
         self.n_mpsocs = params.n_mpsocs
         self.n_qfdbs = params.n_qfdbs
@@ -110,12 +118,12 @@ class Topology:
         """QFDB -> (x, y, z) torus coordinates."""
         mezz = qfdb // self.qfdbs_per_mezz
         x = qfdb % self.qfdbs_per_mezz
-        y = mezz % 4
-        z = mezz // 4
+        y = mezz % self.mezz_y
+        z = mezz // self.mezz_y
         return (x, y, z)
 
     def coords_to_qfdb(self, x: int, y: int, z: int) -> int:
-        mezz = z * 4 + y
+        mezz = z * self.mezz_y + y
         return mezz * self.qfdbs_per_mezz + x
 
     def network_mpsoc(self, qfdb: int) -> int:
@@ -138,6 +146,12 @@ class Topology:
 
     def route(self, src_core: int, dst_core: int) -> Path:
         """Cached dimension-ordered route (see :meth:`_compute_route`)."""
+        if src_core >= self.n_cores or dst_core >= self.n_cores or \
+                src_core < 0 or dst_core < 0:
+            raise ValueError(
+                f"core pair ({src_core}, {dst_core}) outside the "
+                f"{self.n_cores}-core machine; paper-scale rank counts "
+                f"need repro.core.exanet.params.scaled_params")
         if not self._route_cache_size:
             return self._compute_route(src_core, dst_core)
         key = (src_core, dst_core)
@@ -189,10 +203,10 @@ class Topology:
         for x in self._ring_steps(sx, dx, self.qfdbs_per_mezz):
             cur = (x, cur[1], cur[2])
             hops.append(cur)
-        for y in self._ring_steps(sy, dy, 4):
+        for y in self._ring_steps(sy, dy, self.mezz_y):
             cur = (cur[0], y, cur[2])
             hops.append(cur)
-        for z in self._ring_steps(sz, dz, 2):
+        for z in self._ring_steps(sz, dz, self.mezz_z):
             cur = (cur[0], cur[1], z)
             hops.append(cur)
         for h in hops:

@@ -117,6 +117,15 @@ class TpuMachine:
         return alpha_beta_cost_s(schedule, nranks, nbytes,
                                  alpha_s=alpha, bw_bytes_per_s=bw)
 
+    def cost_many(self, schedule: CollectiveSchedule, nranks: int, sizes,
+                  *, fidelity: str = "analytic", level: str | None = None
+                  ) -> list[float]:
+        """Batched :meth:`cost_s` over a message-size grid.  Closed forms
+        have no shared work to amortize, so this is the plain loop — the
+        method exists so the planner can batch uniformly across machines."""
+        return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
+                            level=level) for s in sizes]
+
     def memory_pass_s(self, nbytes: int) -> float:
         """One streaming read+write pass over a buffer (HBM roundtrip)."""
         return 2.0 * nbytes / self.hbm_bw
@@ -149,6 +158,28 @@ class ExanetMachine:
         self.mpi = mpi
         self.params = mpi.p
         self._ab_cache: dict[str, tuple[float, float]] = {}
+        self._tiers: dict[int, object] = {}
+
+    def _mpi_for(self, nranks: int):
+        """The simulation instance that fits ``nranks``: the calibrated
+        prototype when the ranks fit its 512 cores, else a scaled twin
+        (same per-component constants, larger mezzanine torus) built once
+        per size tier — what lets the planner answer paper-scale
+        (1024/4096+) queries the base machine cannot even route."""
+        mpi = self.mpi
+        if nranks < 2:
+            return mpi
+        needed = mpi.rank_core(nranks - 1) + 1
+        if needed <= mpi.p.n_cores:
+            return mpi
+        from repro.core.exanet.mpi import ExanetMPI
+        from repro.core.exanet.params import scaled_params
+        p2 = scaled_params(needed, mpi.p)
+        tier = self._tiers.get(p2.n_cores)
+        if tier is None:
+            tier = self._tiers[p2.n_cores] = ExanetMPI(
+                p2, ranks_per_mpsoc=mpi._rpm)
+        return tier
 
     def _level_alpha_beta(self, level: str) -> tuple[float, float]:
         p = self.params
@@ -192,11 +223,40 @@ class ExanetMachine:
             from repro.core.exanet.allreduce_accel import accel_cost_us
             return accel_cost_us(nbytes, nranks, self.params) * 1e-6
         if fidelity == "sim":
-            return self.mpi.run_schedule(schedule, nbytes,
-                                         nranks).latency_us * 1e-6
+            return self._mpi_for(nranks).run_schedule(
+                schedule, nbytes, nranks).latency_us * 1e-6
         alpha, bw = self.alpha_beta(level or self._default_level(nranks))
         return alpha_beta_cost_s(schedule, nranks, nbytes,
                                  alpha_s=alpha, bw_bytes_per_s=bw)
+
+    def cost_many(self, schedule: CollectiveSchedule, nranks: int, sizes,
+                  *, fidelity: str = "sim", level: str | None = None
+                  ) -> list[float]:
+        """Batched :meth:`cost_s` over a message-size grid.  At ``sim``
+        fidelity one compiled round program (the schedule lowered once for
+        this rank count) serves the whole grid in a single vectorized
+        replay — this is what cuts the planner's cold-plan cost from
+        per-size event simulation to one batched run.  Serial-chain
+        schedules the array executor cannot amortize (see
+        ``round_parallelism``) stay on the interpreter."""
+        sizes = list(sizes)
+        if nranks < 2 or not sizes:
+            return [0.0] * len(sizes)
+        if schedule.name == "allreduce_accel" or fidelity != "sim":
+            return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
+                                level=level) for s in sizes]
+        from repro.core.exanet.exec_compiled import ProgramStructureError
+        mpi = self._mpi_for(nranks)
+        try:
+            if not mpi.compiled_profitable(schedule, nranks):
+                raise ProgramStructureError("serial-chain schedule")
+            res = mpi.run_schedule_many(schedule, sizes, nranks)
+        except (ProgramStructureError, ValueError):
+            # chain-bound, size-varying structure, or a tracing engine:
+            # interpret per size
+            return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
+                                level=level) for s in sizes]
+        return [float(us) * 1e-6 for us in res.latency_us]
 
     def memory_pass_s(self, nbytes: int) -> float:
         """One read+write pass on an A53 endpoint (single DDR4 channel is

@@ -164,6 +164,49 @@ class CollectivePlanner:
         self._cache[key] = plan
         return plan
 
+    def plan_many(self, op: str, sizes, participants: tuple[int, ...] | int,
+                  *, fidelity: str | None = None,
+                  allow_lossy: bool = False) -> list[Plan]:
+        """Memoized plans for a whole message-size grid.
+
+        For ``op="allreduce"`` the uncached sizes are costed in batch: one
+        :meth:`MachineModel.cost_many` call per candidate schedule, which
+        at ``sim`` fidelity reuses one compiled round program across the
+        grid (``exec_compiled``) instead of event-interpreting every
+        (schedule, size) pair — the cold-plan path of a sweep drops from
+        O(sizes) simulations per candidate to one.  Results land in the
+        same plan cache :meth:`plan` uses, so single-size queries keep
+        hitting them."""
+        if isinstance(participants, int):
+            participants = (participants,)
+        participants = tuple(int(p) for p in participants)
+        fidelity = fidelity or self.fidelity
+        sizes = [int(s) for s in sizes]
+        missing = [s for s in dict.fromkeys(sizes)
+                   if (op, s, participants, fidelity, allow_lossy)
+                   not in self._cache]
+        if op == "allreduce" and missing:
+            p = math.prod(participants)
+            m = self.machine
+            costs_by_size: dict[int, list] = {s: [] for s in missing}
+            for name, factory in ALLREDUCE_CANDIDATES:
+                sched = factory()
+                # supports() is by-contract byte-dependent: gate per size
+                # (exactly like plan()) and batch over the feasible subset
+                feasible = [s for s in missing if m.supports(sched, p, s)]
+                if not feasible:
+                    continue
+                for s, c in zip(feasible, m.cost_many(sched, p, feasible,
+                                                      fidelity=fidelity)):
+                    costs_by_size[s].append((name, c))
+            for s in missing:
+                key = (op, s, participants, fidelity, allow_lossy)
+                self._cache[key] = self._pick("allreduce", s, participants,
+                                              costs_by_size[s], fidelity)
+                self._misses += 1
+        return [self.plan(op, s, participants, fidelity=fidelity,
+                          allow_lossy=allow_lossy) for s in sizes]
+
     def _pick(self, op: str, nbytes: int, participants: tuple[int, ...],
               costs: list[tuple[str, float]], fidelity: str) -> Plan:
         if not costs:

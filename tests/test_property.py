@@ -191,6 +191,74 @@ def test_ssd_chunk_invariance(b, nc):
                                atol=2e-4)
 
 
+# ---------------------------------------------------- compiled executor
+from repro.core.exanet.schedules import (RabenseifnerAllreduce,  # noqa: E402
+                                         RecursiveDoublingAllreduce, Round,
+                                         Schedule)
+
+
+class _HypSchedule(Schedule):
+    name = "hyp"
+
+    def __init__(self, rounds, one_way):
+        self._rounds = tuple(rounds)
+        self.one_way = one_way
+
+    def rounds(self, nranks, nbytes):
+        return iter(self._rounds)
+
+
+_exec_mpis = {rpm: ExanetMPI(ranks_per_mpsoc=rpm) for rpm in (None, 1)}
+#: straddles mpi_eager_max_bytes (32 B) and reaches rendez-vous streaming
+_send_bytes = st.sampled_from([0, 1, 31, 32, 33, 4096, 65536, 300000])
+
+
+@st.composite
+def _random_schedules(draw):
+    """Random round structures: duplicate/self sends, mixed per-send
+    transports, exchange and one-way rounds, reductions, sync skew."""
+    n = draw(st.sampled_from([2, 4, 8, 16]))
+    rounds = []
+    for step in range(draw(st.integers(1, 3))):
+        uniform = draw(st.booleans())
+        nb0 = draw(_send_bytes)
+        sends = tuple(
+            (draw(st.integers(0, n - 1)), draw(st.integers(0, n - 1)),
+             nb0 if uniform else draw(_send_bytes))
+            for _ in range(draw(st.integers(1, 10))))
+        rounds.append(Round(step, sends, exchange=draw(st.booleans()),
+                            reduce_bytes=draw(st.sampled_from([0, 64,
+                                                               4096])),
+                            sync=draw(st.booleans())))
+    return n, _HypSchedule(rounds, draw(st.booleans()))
+
+
+def _assert_backends_agree(mpi, sched, size, n):
+    a = mpi.run_schedule(sched, size, n, backend="interp")
+    b = mpi.run_schedule(sched, size, n, backend="compiled")
+    assert b.latency_us == pytest.approx(a.latency_us, rel=1e-9)
+    for x, y in zip(a.clocks, b.clocks):
+        assert y == pytest.approx(x, rel=1e-9, abs=1e-12)
+
+
+@given(_random_schedules(), st.sampled_from([None, 1]))
+def test_compiled_executor_matches_interpreter(n_sched, rpm):
+    """The compiled (vectorized) executor reproduces the interpreter's
+    latency and per-rank clocks to 1e-9 on arbitrary schedules at both
+    rank placements (ranks_per_mpsoc in {1, 4})."""
+    n, sched = n_sched
+    _assert_backends_agree(_exec_mpis[rpm], sched, 0, n)
+
+
+@given(st.sampled_from([RecursiveDoublingAllreduce, RabenseifnerAllreduce]),
+       st.one_of(st.integers(1, 96), st.just(1 << 20)),
+       st.sampled_from([4, 8, 16]), st.sampled_from([None, 1]))
+def test_compiled_matches_interp_shipped_schedules(sched_cls, size, n, rpm):
+    """Shipped allreduce schedules agree across the eager/rendez-vous
+    boundary and into streaming sizes."""
+    _assert_backends_agree(_exec_mpis[rpm], sched_cls(), size, n)
+
+
 # ------------------------------------------------------------- flash attn
 @given(st.integers(1, 2), st.sampled_from([32, 48, 96]),
        st.sampled_from([16, 32]))
