@@ -28,7 +28,8 @@ from repro.core.exanet.exec_compiled import (BatchScheduleResult,
                                              round_parallelism)
 from repro.core.exanet.network import Network
 from repro.core.exanet.params import DEFAULT, HwParams
-from repro.core.exanet.schedules import (ALLREDUCE_SCHEDULES, AllGather,
+from repro.core.exanet.schedules import (ALLREDUCE_SCHEDULES,
+                                         COLLECTIVE_SCHEDULES, AllGather,
                                          AllToAll, Barrier, BinomialBroadcast,
                                          CollectiveSchedule, GatherBinomial,
                                          RecursiveDoublingAllreduce,
@@ -152,7 +153,9 @@ class ExanetMPI:
     COMPILED_AUTO_MIN_RANKS = 512
 
     def run_schedule(self, sched: CollectiveSchedule, size: int,
-                     nranks: int, *, backend: str = "auto") -> ScheduleResult:
+                     nranks: int, *, backend: str = "auto",
+                     t0: list[float] | None = None,
+                     reset: bool = True) -> ScheduleResult:
         """Replay a schedule's rounds on the event engine.
 
         One-way rounds relay data down a tree (receiver clock = arrival,
@@ -168,14 +171,26 @@ class ExanetMPI:
         ``"auto"`` (compiled at paper scale / for batched sweeps, where
         the interpreter is Python-bound; interpreted otherwise, and always
         when tracing is on — the compiled path records no trace).
+
+        ``t0``/``reset`` serve *embedded* execution inside a program
+        (:meth:`run_program`): ``t0`` gives per-rank entry clocks (the
+        collective starts skewed, like real ranks arriving late) and
+        ``reset=False`` keeps the engine's occupancy from in-flight
+        point-to-point traffic.  Embedded runs always interpret — the
+        compiled executor assumes zero occupancy and rank-uniform start.
         """
         if backend not in ("auto", "interp", "compiled"):
             raise ValueError(f"unknown backend {backend!r}; "
                              f"options: ['auto', 'compiled', 'interp']")
+        embedded = t0 is not None or not reset
+        if embedded and backend == "compiled":
+            raise ValueError("compiled backend cannot start from nonzero "
+                             "clocks/occupancy; use backend='interp'")
         auto = backend == "auto"
         if auto:
             backend = "compiled" if (
-                not self.net.engine.tracing
+                not embedded
+                and not self.net.engine.tracing
                 and nranks >= self.COMPILED_AUTO_MIN_RANKS
                 and self.compiled_profitable(sched, nranks)) else "interp"
         if backend == "compiled":
@@ -194,10 +209,12 @@ class ExanetMPI:
         one_way = sched.one_way
         eager_max = p.mpi_eager_max_bytes
         r5_occ = p.r5_occupancy_us
-        net.reset()
+        if reset:
+            net.reset()
         cores = self._cores(nranks)
         r5s = None  # per-rank R5 resources, bound on first rdv round
-        clocks = [self._copy_us(sched.pre_copy_bytes(size))] * nranks
+        pre = self._copy_us(sched.pre_copy_bytes(size))
+        clocks = [pre] * nranks if t0 is None else [t + pre for t in t0]
         # per-step sync skew (§6.1.4 noise stand-in) hits every rank equally,
         # so it is tracked as one running offset instead of N list writes;
         # ``clocks`` stores times relative to -skew.
@@ -325,6 +342,81 @@ class ExanetMPI:
                              "use backend='interp' (or trace=False)")
         prog = self.compiled_program(sched, nranks)
         return prog.run(sched, sizes)
+
+    # ------------------------------------------------------ program execution
+    def run_program(self, prog, *, plans: dict | None = None):
+        """Execute a :class:`repro.core.program.Program` on the event engine.
+
+        Every rank's ops run concurrently: ``Compute`` occupies the rank's
+        A53 core, nonblocking sends go through :meth:`Network.isend` (so
+        simultaneous flows from *all* ranks contend on the shared
+        R5/DMA/link resources — full-machine halo congestion is emergent,
+        not modeled), and embedded ``Collective`` ops replay their
+        schedule via :meth:`run_schedule` with the ranks' skewed entry
+        clocks and the engine's live occupancy.
+
+        ``Collective(algo="auto")`` sites are planned in one pass by the
+        :class:`~repro.core.planner.CollectivePlanner` *before* execution
+        starts (planning simulates candidate schedules on this same
+        engine, which resets occupancy); ``plans`` can inject the mapping
+        ``{(op, nbytes): Plan}`` directly, e.g. from
+        :meth:`CollectivePlanner.plan_program`.
+
+        Returns the executor's :class:`~repro.core.program.ProgramResult`
+        (per-rank completion clocks, total compute, send/collective
+        counts).
+        """
+        from repro.core.program import ProgramExecutor
+        nranks = prog.nranks
+        if plans is None and nranks >= 2 and any(
+                c.algo == "auto" and c.op == "allreduce"
+                for c in prog.collectives()):
+            plans = self.planner.plan_program(prog)
+        plans = plans or {}
+        net = self.net
+        cores = self._cores(nranks)
+        core_res = [net.engine.resource(sim.CORE, c) for c in cores]
+        net.reset()
+
+        def compute(rank: int, us: float, t: float) -> float:
+            return core_res[rank].acquire(t, us) + us
+
+        def p2p(src: int, dst: int, nbytes: int, tag: int,
+                t_send: float, t_recv: float) -> tuple[float, float]:
+            res = net.isend(cores[src], cores[dst], nbytes, t_send, t_recv)
+            return res.t_send_done, res.t_recv_done
+
+        def collective(op: str, nbytes: int, algo: str,
+                       enters: list[float]) -> list[float]:
+            n = len(enters)
+            if n < 2:
+                return list(enters)
+            algos = COLLECTIVE_SCHEDULES.get(op)
+            if algos is None:
+                raise ValueError(f"unknown collective op {op!r}; options: "
+                                 f"{sorted(COLLECTIVE_SCHEDULES)}")
+            name = algo
+            if algo == "auto":
+                plan = plans.get((op, int(nbytes)))
+                # non-allreduce ops have a single shipped schedule each
+                name = plan.schedule if plan is not None else \
+                    next(iter(algos))
+            if name == "accel":
+                from repro.core.exanet.allreduce_accel import accel_cost_us
+                t = max(enters) + accel_cost_us(nbytes, n, self.p)
+                return [t] * n
+            cls = algos.get(name)
+            if cls is None:
+                raise ValueError(f"unknown {op} algo {name!r}; options: "
+                                 f"{sorted(algos) + ['auto']}")
+            res = self.run_schedule(cls(), nbytes, n, backend="interp",
+                                    t0=list(enters), reset=False)
+            shift = res.latency_us - max(res.clocks)
+            return [c + shift for c in res.clocks]
+
+        return ProgramExecutor(
+            prog, compute=compute, p2p=p2p, collective=collective,
+            post_overhead_us=self.p.a53_call_overhead_us).run()
 
     def _step_class(self, src: int, dst: int) -> str:
         d = abs(dst - src) * (self.p.cores_per_mpsoc if self._rpm == 1 else 1)

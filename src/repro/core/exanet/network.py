@@ -44,6 +44,14 @@ class SendResult:
     t_sender_free: float # when the sender returns from the blocking send
 
 
+@dataclasses.dataclass(slots=True)
+class P2PResult:
+    """Outcome of one *nonblocking* matched point-to-point transfer."""
+    t_send_done: float   # when MPI_Wait on the Isend request would return
+    t_recv_done: float   # when MPI_Wait on the Irecv request would return
+    transport: str       # "eager" | "rendezvous"
+
+
 class Network:
     """Latency/bandwidth model with optional resource contention."""
 
@@ -299,6 +307,30 @@ class Network:
             eng.record(TraceEvent(t, src_core, dst_core, size, RDV,
                                   complete, complete))
         return complete, complete
+
+    def isend(self, src_core: int, dst_core: int, size: int,
+              t_send: float, t_recv: float, *,
+              one_way: bool = True) -> P2PResult:
+        """Nonblocking matched point-to-point transfer (program execution).
+
+        Eager messages depart at ``t_send`` regardless of the receive post
+        (the mailbox buffers them); the Irecv request completes when the
+        payload has arrived *and* the receive is posted.  Rendez-vous
+        transfers cannot start before both sides are ready — the RTS/CTS
+        handshake needs the posted receive — so the stream is issued at
+        ``max(t_send, t_recv)``; MPI_Wait on the Isend request returns at
+        payload completion (the end-to-end ACK travels with the data,
+        §5.2.1).  All shared resources (packetizer, R5, DMA, links) are
+        acquired through the engine, so concurrent programs from every
+        rank contend exactly like collective schedules do.
+        """
+        if size <= self._eager_max:
+            complete, sender_free = self._send(src_core, dst_core, size,
+                                               t_send, one_way)
+            return P2PResult(sender_free, max(complete, t_recv), EAGER)
+        t0 = max(t_send, t_recv)
+        complete, _ = self._send(src_core, dst_core, size, t0, one_way)
+        return P2PResult(complete, complete, RDV)
 
     def charge_r5(self, mpsoc: int, t: float) -> float:
         """Charge one R5-firmware invocation (e.g. end-to-end ACK handling,

@@ -315,6 +315,20 @@ ALLREDUCE_SCHEDULES = {
     "oneshot": OneShotAllreduce,
 }
 
+#: op -> {algo name -> schedule class} for embedded Program collectives
+#: (first key of each op is its default algorithm; ``algo="auto"`` on a
+#: non-allreduce op falls back to that default — the planner only ranks
+#: allreduce candidates today)
+COLLECTIVE_SCHEDULES: dict[str, dict[str, type]] = {
+    "allreduce": ALLREDUCE_SCHEDULES,
+    "bcast": {"binomial": BinomialBroadcast},
+    "allgather": {"recursive_doubling": AllGather},
+    "alltoall": {"pairwise": AllToAll},
+    "barrier": {"dissemination": Barrier},
+    "scatter": {"binomial": ScatterBinomial},
+    "gather": {"binomial": GatherBinomial},
+}
+
 
 # --------------------------------------------------------- alpha-beta costs
 def alpha_beta_cost_s(schedule: CollectiveSchedule, nranks: int, nbytes: int,

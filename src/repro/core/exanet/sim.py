@@ -41,6 +41,9 @@ R5 = "r5"        # per-MPSoC R5 transaction-layer firmware
 DMA = "dma"      # per-MPSoC AXI/DMA wire
 PKTZ = "pktz"    # per-MPSoC packetizer
 LINK = "link"    # one physical link direction
+CORE = "core"    # one A53 core (per-rank compute resource: program
+                 # execution charges Compute ops on it, so compute and
+                 # in-flight communication overlap is accounted per rank)
 
 
 class Resource:

@@ -29,12 +29,73 @@ from __future__ import annotations
 import dataclasses
 from typing import ClassVar, Protocol, runtime_checkable
 
-from repro.core.exanet.schedules import (CollectiveSchedule,
+from repro.core.exanet.schedules import (COLLECTIVE_SCHEDULES,
+                                         CollectiveSchedule,
                                          alpha_beta_cost_s)
 from repro.roofline.hw import V5E
 
 INTRA = "intra"
 INTER = "inter"
+
+
+def _analytic_coll_us(nranks: int, alpha_s: float, bw_bytes_per_s: float,
+                      accel_params=None):
+    """Closed-form cost hook for embedded program collectives: alpha-beta
+    cost of the named schedule, or of the cheapest feasible candidate when
+    ``algo="auto"`` (the analytic twin of the planner's choice).  The §4.7
+    accelerator is already a closed form, so ``algo="accel"`` costs it
+    directly when the machine has one (``accel_params``); machines
+    without an NI accelerator reject it at either fidelity."""
+    def _accel_us(nbytes: int):
+        """Closed-form accel cost, or None when this machine has no NI
+        accelerator / the rank envelope rules it out."""
+        if accel_params is None:
+            return None
+        from repro.core.exanet.allreduce_accel import (accel_cost_us,
+                                                       accel_rank_applicable)
+        if not accel_rank_applicable(nranks, accel_params):
+            return None
+        return accel_cost_us(nbytes, nranks, accel_params)
+
+    def cost_us(op: str, nbytes: int, algo: str) -> float:
+        if op == "allreduce" and algo == "accel":
+            accel = _accel_us(nbytes)
+            if accel is None:
+                raise ValueError("no NI allreduce accelerator on this "
+                                 "machine (or rank count outside its "
+                                 "envelope)")
+            return accel
+        algos = COLLECTIVE_SCHEDULES.get(op)
+        if algos is None:
+            raise ValueError(f"unknown collective op {op!r}; options: "
+                             f"{sorted(COLLECTIVE_SCHEDULES)}")
+        if algo == "auto":
+            candidates = list(algos.values())
+        else:
+            if algo not in algos:
+                raise ValueError(f"unknown {op} algo {algo!r}; options: "
+                                 f"{sorted(algos) + ['auto']}")
+            candidates = [algos[algo]]
+        best = None
+        for cls in candidates:
+            sched = cls()
+            if not _schedule_feasible(sched, nranks, nbytes):
+                continue
+            c = alpha_beta_cost_s(sched, nranks, nbytes, alpha_s=alpha_s,
+                                  bw_bytes_per_s=bw_bytes_per_s)
+            if best is None or c < best:
+                best = c
+        if op == "allreduce" and algo == "auto":
+            # the analytic twin of the planner's choice considers the
+            # §4.7 accelerator too (its closed form needs no alpha-beta)
+            accel = _accel_us(nbytes)
+            if accel is not None and (best is None or accel * 1e-6 < best):
+                best = accel * 1e-6
+        if best is None:
+            raise ValueError(f"no feasible {op} schedule at "
+                             f"nranks={nranks} nbytes={nbytes}")
+        return best * 1e6
+    return cost_us
 
 
 def _schedule_feasible(schedule: CollectiveSchedule, nranks: int,
@@ -71,6 +132,14 @@ class MachineModel(Protocol):
                *, fidelity: str = "analytic", level: str | None = None
                ) -> float:
         """Predicted seconds for one execution of the schedule."""
+        ...
+
+    def cost_program(self, prog, *, fidelity: str = "analytic",
+                     level: str | None = None) -> float:
+        """Predicted seconds for one execution of a whole
+        :class:`repro.core.program.Program` (compute + point-to-point +
+        embedded collectives, with whatever overlap the program
+        expresses)."""
         ...
 
 
@@ -125,6 +194,18 @@ class TpuMachine:
         method exists so the planner can batch uniformly across machines."""
         return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
                             level=level) for s in sizes]
+
+    def cost_program(self, prog, *, fidelity: str = "analytic",
+                     level: str | None = None) -> float:
+        """Closed-form program time: the TPU target has no event
+        simulator, so both fidelities are the contention-free alpha-beta
+        walk of :func:`repro.core.program.analytic_program_us`."""
+        from repro.core.program import analytic_program_us
+        alpha, bw = self.alpha_beta(level or INTRA)
+        res = analytic_program_us(
+            prog, alpha_us=alpha * 1e6, bw_bytes_per_us=bw * 1e-6,
+            coll_cost_us=_analytic_coll_us(prog.nranks, alpha, bw))
+        return res.latency_us * 1e-6
 
     def memory_pass_s(self, nbytes: int) -> float:
         """One streaming read+write pass over a buffer (HBM roundtrip)."""
@@ -257,6 +338,29 @@ class ExanetMachine:
             return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
                                 level=level) for s in sizes]
         return [float(us) * 1e-6 for us in res.latency_us]
+
+    def cost_program(self, prog, *, fidelity: str = "sim",
+                     level: str | None = None) -> float:
+        """Program cost on the prototype.  ``fidelity="sim"`` executes the
+        program on the event engine of the tier that fits its rank count
+        (:meth:`ExanetMPI.run_program`: per-rank cores, contending
+        point-to-point flows, embedded collectives at live occupancy);
+        ``"analytic"`` is the contention-free alpha-beta walk — their gap
+        *is* the congestion the retired apps ``alpha`` used to paper
+        over."""
+        nranks = prog.nranks
+        if nranks < 1:
+            return 0.0
+        if fidelity == "sim":
+            mpi = self._mpi_for(nranks)
+            return mpi.run_program(prog).latency_us * 1e-6
+        alpha, bw = self.alpha_beta(level or self._default_level(nranks))
+        from repro.core.program import analytic_program_us
+        res = analytic_program_us(
+            prog, alpha_us=alpha * 1e6, bw_bytes_per_us=bw * 1e-6,
+            coll_cost_us=_analytic_coll_us(nranks, alpha, bw,
+                                           accel_params=self.params))
+        return res.latency_us * 1e-6
 
     def memory_pass_s(self, nbytes: int) -> float:
         """One read+write pass on an A53 endpoint (single DDR4 channel is

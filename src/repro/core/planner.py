@@ -207,6 +207,33 @@ class CollectivePlanner:
         return [self.plan(op, s, participants, fidelity=fidelity,
                           allow_lossy=allow_lossy) for s in sizes]
 
+    def plan_program(self, prog, *, fidelity: str | None = None,
+                     allow_lossy: bool = False) -> dict:
+        """Plan every ``Collective(algo="auto")`` site of a
+        :class:`repro.core.program.Program` in one pass.
+
+        Sites are grouped by op and planned through :meth:`plan_many`, so
+        at ``sim`` fidelity all sizes of one candidate schedule share a
+        single compiled round program instead of being event-interpreted
+        per site.  Returns ``{(op, nbytes): Plan}`` — the mapping
+        :meth:`repro.core.exanet.mpi.ExanetMPI.run_program` consumes.
+        Only allreduce sites have multiple candidates today; other ops
+        fall back to their single shipped schedule at execution time and
+        need no plan.
+        """
+        sites: dict[str, set[int]] = {}
+        for c in prog.collectives():
+            if c.algo == "auto" and c.op == "allreduce":
+                sites.setdefault(c.op, set()).add(int(c.nbytes))
+        out: dict[tuple[str, int], Plan] = {}
+        for op, sizes in sites.items():
+            ordered = sorted(sizes)
+            plans = self.plan_many(op, ordered, (prog.nranks,),
+                                   fidelity=fidelity,
+                                   allow_lossy=allow_lossy)
+            out.update({(op, s): p for s, p in zip(ordered, plans)})
+        return out
+
     def _pick(self, op: str, nbytes: int, participants: tuple[int, ...],
               costs: list[tuple[str, float]], fidelity: str) -> Plan:
         if not costs:

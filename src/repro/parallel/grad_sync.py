@@ -146,6 +146,43 @@ def _compressed_allreduce(b, mesh, axes):
                          check_vma=False)(b)
 
 
+# -------------------------------------------------------- program emission
+def emit_sync_program(nranks: int, bucket_bytes_list, *,
+                      compute_us_per_bucket=0.0, algo: str = "auto"):
+    """Emit the train-step gradient-sync :class:`repro.core.program.Program`
+    of a bucketed backward pass: per bucket, the backward-compute slice
+    that produces it, then its allreduce.
+
+    This is the Layer-B tie-in to the workload simulator: run it through
+    :meth:`ExanetMPI.run_program` or :meth:`MachineModel.cost_program` and
+    the planner's per-bucket schedule choices (``algo="auto"``) plus the
+    compute/communication overlap of the bucket pipeline become
+    inspectable quantities instead of trace-time guesses.
+
+    ``bucket_bytes_list`` is the per-bucket byte count — e.g.
+    ``[b.size * b.dtype.itemsize for b in flatten_to_buckets(grads, n)[0]]``
+    — and ``compute_us_per_bucket`` a scalar or per-bucket sequence of the
+    backward microseconds preceding each bucket's readiness.  Pure
+    host-side (no jax): callable from tests and benchmarks without
+    devices.
+    """
+    from repro.core.program import Collective, Compute, Program
+    sizes = [int(b) for b in bucket_bytes_list]
+    try:
+        per_bucket = [float(c) for c in compute_us_per_bucket]
+    except TypeError:
+        per_bucket = [float(compute_us_per_bucket)] * len(sizes)
+    if len(per_bucket) != len(sizes):
+        raise ValueError(f"{len(sizes)} buckets but {len(per_bucket)} "
+                         f"compute entries")
+    ops = []
+    for nb, us in zip(sizes, per_bucket):
+        if us > 0.0:
+            ops.append(Compute(us))
+        ops.append(Collective("allreduce", max(nb, 1), algo))
+    return Program(tuple(tuple(ops) for _ in range(nranks)))
+
+
 class CompressedSync:
     """EF-SGD-style error feedback (Karimireddy et al. 2019): the residual
     of the *local* quantization is carried into the next step, keeping the
