@@ -15,6 +15,8 @@ from repro.core.exanet.schedules import (CollectiveSchedule, Round,
 from repro.core.exanet.exec_compiled import (BatchScheduleResult,
                                              ProgramStructureError,
                                              RoundProgram)
+from repro.core.exanet.program_compiled import (CompiledProgram,
+                                                compile_program_ir)
 from repro.core.exanet.mpi import ExanetMPI, BcastResult, ScheduleResult
 from repro.core.exanet.allreduce_accel import (accel_allreduce_latency,
                                                accel_applicable)
@@ -23,6 +25,7 @@ __all__ = [
     "DEFAULT", "HwParams", "scaled_params", "Topology", "Path", "Engine",
     "Resource", "TraceEvent", "Network", "CollectiveSchedule", "Round",
     "alpha_beta_cost_s", "BatchScheduleResult", "ProgramStructureError",
-    "RoundProgram", "ExanetMPI", "BcastResult", "ScheduleResult",
+    "RoundProgram", "CompiledProgram", "compile_program_ir",
+    "ExanetMPI", "BcastResult", "ScheduleResult",
     "accel_allreduce_latency", "accel_applicable",
 ]

@@ -81,12 +81,28 @@ class AppModel:
         default_factory=dict, init=False, repr=False, compare=False)
     _beta_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False)
+    _machine: object = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def mpi(self) -> ExanetMPI:
         if self._mpi is None:
             self._mpi = ExanetMPI(self.params)
         return self._mpi
+
+    def mpi_for(self, n: int) -> ExanetMPI:
+        """The simulation instance that fits ``n`` ranks: the calibrated
+        prototype up to its 512 cores, else a scaled twin per size tier
+        (``params.scaled_params``: same component constants, larger
+        mezzanine torus) — what lets the weak-scaling sweep predict
+        1024-4096-rank iterations the base machine cannot even route.
+        Tier construction is delegated to
+        :meth:`repro.core.machine.ExanetMachine._mpi_for`, so benchmarks,
+        planner and apps all agree on one twin per rank count."""
+        if self._machine is None:
+            from repro.core.machine import ExanetMachine
+            self._machine = ExanetMachine(mpi=self.mpi)
+        return self._machine._mpi_for(n)
 
     # ------------------------------------------------------------- emission
     def _local_points(self, mode: str, n: int) -> float:
@@ -110,14 +126,24 @@ class AppModel:
                             coll_algo="recursive_doubling")
 
     # ----------------------------------------------------------- simulation
+    def simulate_iteration(self, mode: str, n: int, *,
+                           backend: str = "auto") -> ProgramResult:
+        """Event-simulate one iteration on the tier that fits ``n``
+        ranks.  ``backend="auto"`` compiles the program at paper scale
+        (:data:`ExanetMPI.PROGRAM_COMPILED_AUTO_MIN_RANKS`) — beyond 512
+        ranks the interpreted executor is impractical for sweeps, so the
+        1024-4096-rank weak-scaling rows of ``BENCH_apps.json`` exist
+        only because of this path."""
+        return self.mpi_for(n).run_program(self.emit_iteration(mode, n),
+                                           backend=backend)
+
     def _simulate(self, mode: str, n: int) -> ProgramResult:
         """Event-simulated iteration (cached): all ranks' halo flows and
         embedded collectives contend on one engine."""
         key = (mode, n)
         res = self._sim_cache.get(key)
         if res is None:
-            res = self._sim_cache[key] = self.mpi.run_program(
-                self.emit_iteration(mode, n))
+            res = self._sim_cache[key] = self.simulate_iteration(mode, n)
         return res
 
     def _comp_us(self, local_points: float, n: int) -> float:

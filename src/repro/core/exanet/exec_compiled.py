@@ -292,9 +292,133 @@ def _level_assignment(n, src, dst, res_tags, exchange):
 
 
 # ---------------------------------------------------------------------------
+# the vectorized transport substrate (shared by RoundProgram and the Program
+# compiler in program_compiled.py)
+# ---------------------------------------------------------------------------
+class VecTransport:
+    """The eager / rendez-vous transports over an array-backed
+    :class:`ResourceState`: stage acquisition via the segmented max-plus
+    scans, exactly mirroring ``Network._send``'s acquire chain.  Both
+    compiled executors — collective :class:`RoundProgram`\\ s and whole
+    Program-IR artifacts (:mod:`repro.core.exanet.program_compiled`) —
+    run their sends through these three methods, so there is exactly one
+    vectorized implementation of the interpreter's transport semantics."""
+
+    def _init_transport(self, p):
+        self._p = p
+        self._eager_max = p.mpi_eager_max_bytes
+        self._pktz_occ = p.pktz_occupancy_us
+        self._pktz_ret = p.pktz_occupancy_us + p.a53_call_overhead_us
+        self._r5_occ = p.r5_occupancy_us
+        self._rdma_startup = p.rdma_startup_us
+
+    def _stage_acquire(self, state, st, t, dur, act, dur_const, cols):
+        """Acquire one stage; ``t`` is the branch's (k, Bc) issue array,
+        result is the start times in ``st.sperm`` order (level order when
+        ``sperm`` is None — a contention-free full-cover stage).
+
+        ``act`` is the per-send activity mask (None = all active; only
+        non-column-uniform rounds mask).  ``cols`` restricts the acquire
+        to a batch-column subset (the transport split of a mixed
+        column-uniform round).  ``dur_const`` promises the duration is
+        group-constant per column, unlocking the running-max fast path.
+        """
+        gather = st.sperm is not None
+        ts = t[st.sperm] if gather else t
+        scalar_dur = not isinstance(dur, np.ndarray)
+        ds = dur if scalar_dur or not gather else dur[st.sperm]
+        rows = st.rows
+        if st.max_group == 1:
+            if cols is not None:
+                ix = (rows[:, None], cols[None, :])
+                free = state.free[ix]
+                start = np.maximum(ts, free)
+                state.free[ix] = start + ds
+                return start
+            if act is None:
+                return state.acquire_unique(rows, ts, ds)
+            return state.acquire_unique_masked(
+                rows, ts, ds, act[st.sperm] if gather else act)
+        if cols is not None:
+            ix = (rows[:, None], cols[None, :])
+            F0 = state.free[ix]
+        else:
+            F0 = state.free[rows]
+        if dur_const and act is None:
+            # group-constant durations: one plain running-max scan
+            v = segmented_running_max(ts - st.kpos * ds, st.takes)
+            f_after = np.maximum(v, F0) + st.kpos1 * ds
+        else:
+            if act is None:
+                D, T = np.array(ds, copy=True), ts + ds
+                if D.shape != T.shape:
+                    D = np.broadcast_to(D, T.shape).copy()
+            else:
+                asub = act[st.sperm] if gather else act
+                D = np.where(asub, ds, 0.0)
+                T = np.where(asub, ts + ds, NEG_INF)
+            Dacc, Tacc = segmented_maxplus_scan(D, T, st.first,
+                                                st.max_group,
+                                                takes=st.takes, copy=False)
+            f_after = np.maximum(F0 + Dacc, Tacc)
+        if cols is not None:
+            state.free[(rows[st.last][:, None], cols[None, :])] = \
+                f_after[st.last]
+        else:
+            state.free[rows[st.last]] = f_after[st.last]
+        return f_after - ds
+
+    def _run_eager(self, state, lv, t_issue, nbl, act, cols):
+        """The packetizer/mailbox transport: (complete, sender_free)."""
+        st = lv.pktz
+        r = self._stage_acquire(state, st, t_issue, self._pktz_occ, act,
+                                True, cols)
+        if st.sperm is None:
+            dep = r
+        else:
+            dep = np.empty(t_issue.shape)
+            dep[st.sperm] = r
+        comp = dep + lv.e_const + nbl * lv.eager_pb
+        return comp, dep + self._pktz_ret
+
+    def _run_rdv(self, state, lv, t_issue, nbl, act, cols, uni):
+        """The RTS/CTS + RDMA transport: (complete, complete)."""
+        stream = nbl * lv.stream_pb
+        st = lv.r5
+        r = self._stage_acquire(state, st, t_issue + lv.handshake,
+                                self._r5_occ, act, True, cols)
+        if st.sperm is None:
+            cur = r + self._rdma_startup
+        else:
+            cur = np.empty(t_issue.shape)
+            cur[st.sperm] = r
+            cur += self._rdma_startup
+        st = lv.dsrc
+        s0 = self._stage_acquire(state, st, cur, stream, act,
+                                 uni and st.pb_uniform, cols)
+        if st.sperm is None:
+            cur = s0
+        else:
+            cur[st.sperm] = s0
+        occupied = cur + stream
+        for st in lv.links:
+            s0 = self._stage_acquire(state, st, cur, stream, act,
+                                     uni and st.pb_uniform, cols)
+            cur[st.sperm] = s0
+            occupied[st.sperm] = s0 + stream[st.sperm]
+        st = lv.ddst
+        if st is not None:
+            s0 = self._stage_acquire(state, st, cur, stream, act,
+                                     uni and st.pb_uniform, cols)
+            occupied[st.sperm] = s0 + stream[st.sperm]
+        comp = occupied + lv.hop
+        return comp, comp
+
+
+# ---------------------------------------------------------------------------
 # the program
 # ---------------------------------------------------------------------------
-class RoundProgram:
+class RoundProgram(VecTransport):
     """A schedule lowered for one (nranks, placement, topology)."""
 
     def __init__(self, net, sched, cores, nranks):
@@ -302,13 +426,7 @@ class RoundProgram:
         self.one_way = bool(sched.one_way)
         self.nranks = nranks
         self.cores = list(cores)
-        p = net.p
-        self._p = p
-        self._eager_max = p.mpi_eager_max_bytes
-        self._pktz_occ = p.pktz_occupancy_us
-        self._pktz_ret = p.pktz_occupancy_us + p.a53_call_overhead_us
-        self._r5_occ = p.r5_occupancy_us
-        self._rdma_startup = p.rdma_startup_us
+        self._init_transport(net.p)
         self.round_heads: list = []
         self.rounds: list = []
         self._bind_cache: dict = {}
@@ -514,108 +632,6 @@ class RoundProgram:
         return bound
 
     # ------------------------------------------------------------ execution
-    def _stage_acquire(self, state, st, t, dur, act, dur_const, cols):
-        """Acquire one stage; ``t`` is the branch's (k, Bc) issue array,
-        result is the start times in ``st.sperm`` order (level order when
-        ``sperm`` is None — a contention-free full-cover stage).
-
-        ``act`` is the per-send activity mask (None = all active; only
-        non-column-uniform rounds mask).  ``cols`` restricts the acquire
-        to a batch-column subset (the transport split of a mixed
-        column-uniform round).  ``dur_const`` promises the duration is
-        group-constant per column, unlocking the running-max fast path.
-        """
-        gather = st.sperm is not None
-        ts = t[st.sperm] if gather else t
-        scalar_dur = not isinstance(dur, np.ndarray)
-        ds = dur if scalar_dur or not gather else dur[st.sperm]
-        rows = st.rows
-        if st.max_group == 1:
-            if cols is not None:
-                ix = (rows[:, None], cols[None, :])
-                free = state.free[ix]
-                start = np.maximum(ts, free)
-                state.free[ix] = start + ds
-                return start
-            if act is None:
-                return state.acquire_unique(rows, ts, ds)
-            return state.acquire_unique_masked(
-                rows, ts, ds, act[st.sperm] if gather else act)
-        if cols is not None:
-            ix = (rows[:, None], cols[None, :])
-            F0 = state.free[ix]
-        else:
-            F0 = state.free[rows]
-        if dur_const and act is None:
-            # group-constant durations: one plain running-max scan
-            v = segmented_running_max(ts - st.kpos * ds, st.takes)
-            f_after = np.maximum(v, F0) + st.kpos1 * ds
-        else:
-            if act is None:
-                D, T = np.array(ds, copy=True), ts + ds
-                if D.shape != T.shape:
-                    D = np.broadcast_to(D, T.shape).copy()
-            else:
-                asub = act[st.sperm] if gather else act
-                D = np.where(asub, ds, 0.0)
-                T = np.where(asub, ts + ds, NEG_INF)
-            Dacc, Tacc = segmented_maxplus_scan(D, T, st.first,
-                                                st.max_group,
-                                                takes=st.takes, copy=False)
-            f_after = np.maximum(F0 + Dacc, Tacc)
-        if cols is not None:
-            state.free[(rows[st.last][:, None], cols[None, :])] = \
-                f_after[st.last]
-        else:
-            state.free[rows[st.last]] = f_after[st.last]
-        return f_after - ds
-
-    def _run_eager(self, state, lv, t_issue, nbl, act, cols):
-        """The packetizer/mailbox transport: (complete, sender_free)."""
-        st = lv.pktz
-        r = self._stage_acquire(state, st, t_issue, self._pktz_occ, act,
-                                True, cols)
-        if st.sperm is None:
-            dep = r
-        else:
-            dep = np.empty(t_issue.shape)
-            dep[st.sperm] = r
-        comp = dep + lv.e_const + nbl * lv.eager_pb
-        return comp, dep + self._pktz_ret
-
-    def _run_rdv(self, state, lv, t_issue, nbl, act, cols, uni):
-        """The RTS/CTS + RDMA transport: (complete, complete)."""
-        stream = nbl * lv.stream_pb
-        st = lv.r5
-        r = self._stage_acquire(state, st, t_issue + lv.handshake,
-                                self._r5_occ, act, True, cols)
-        if st.sperm is None:
-            cur = r + self._rdma_startup
-        else:
-            cur = np.empty(t_issue.shape)
-            cur[st.sperm] = r
-            cur += self._rdma_startup
-        st = lv.dsrc
-        s0 = self._stage_acquire(state, st, cur, stream, act,
-                                 uni and st.pb_uniform, cols)
-        if st.sperm is None:
-            cur = s0
-        else:
-            cur[st.sperm] = s0
-        occupied = cur + stream
-        for st in lv.links:
-            s0 = self._stage_acquire(state, st, cur, stream, act,
-                                     uni and st.pb_uniform, cols)
-            cur[st.sperm] = s0
-            occupied[st.sperm] = s0 + stream[st.sperm]
-        st = lv.ddst
-        if st is not None:
-            s0 = self._stage_acquire(state, st, cur, stream, act,
-                                     uni and st.pb_uniform, cols)
-            occupied[st.sperm] = s0 + stream[st.sperm]
-        comp = occupied + lv.hop
-        return comp, comp
-
     def _exec_exchange_round(self, state, r, rb, t_issue, B):
         """All sends of an exchange round: the eager branch runs once
         round-wide (packetizer sharing is always same-stage), the
@@ -711,13 +727,27 @@ class RoundProgram:
         return (np.where(rdvl, comp_r, comp_e),
                 np.where(rdvl, sfree_r, sfree_e))
 
-    def run(self, sched, sizes) -> BatchScheduleResult:
-        """Execute the program over a message-size grid in one batch."""
+    def run(self, sched, sizes, *, state: ResourceState | None = None,
+            t0: np.ndarray | None = None) -> BatchScheduleResult:
+        """Execute the program over a message-size grid in one batch.
+
+        ``state``/``t0`` serve *embedded* execution inside a compiled
+        Program-IR artifact (:mod:`repro.core.exanet.program_compiled`) —
+        the array twin of the interpreter's ``run_schedule(t0=, reset=
+        False)`` seam: ``t0`` gives per-rank per-column entry clocks
+        (shape (nranks, B)), ``state`` the live occupancy the collective
+        starts over (its rows must cover :attr:`n_rows`).  The level
+        decomposition is start-state independent, so one lowered program
+        serves both the cold standalone replay and every spliced entry.
+        """
         bound = self.bind(sched, sizes)
         B = len(bound.sizes)
         p = self._p
-        state = ResourceState(self.n_rows, B)
+        if state is None:
+            state = ResourceState(self.n_rows, B)
         clocks = np.tile(bound.pre_copy_us, (self.nranks, 1))
+        if t0 is not None:
+            clocks = clocks + t0
         skew = 0.0
         for r, rb in zip(self.rounds, bound.rounds):
             if r.exchange:

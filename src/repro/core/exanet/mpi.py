@@ -344,7 +344,124 @@ class ExanetMPI:
         return prog.run(sched, sizes)
 
     # ------------------------------------------------------ program execution
-    def run_program(self, prog, *, plans: dict | None = None):
+    #: ``run_program(backend="auto")`` compiles at and above this rank
+    #: count: per-iteration replay of a lowered Program beats the
+    #: interpreted heap scheduler once thousands of matches contend
+    #: (below it, array dispatch overhead wins; the apps sweep records
+    #: the crossover empirically in BENCH_apps.json)
+    PROGRAM_COMPILED_AUTO_MIN_RANKS = 256
+
+    def _resolve_collective_schedule(self, op: str, nbytes: int, algo: str,
+                                     plans: dict) -> str:
+        """The executor key an embedded ``Collective`` resolves to — one
+        place, so the interpreter hook and the compiled splice
+        (:mod:`repro.core.exanet.program_compiled`) can never drift."""
+        algos = COLLECTIVE_SCHEDULES.get(op)
+        if algos is None:
+            raise ValueError(f"unknown collective op {op!r}; options: "
+                             f"{sorted(COLLECTIVE_SCHEDULES)}")
+        name = algo
+        if algo == "auto":
+            plan = plans.get((op, int(nbytes)))
+            # non-allreduce ops have a single shipped schedule each
+            name = plan.schedule if plan is not None else next(iter(algos))
+        if name != "accel" and name not in algos:
+            raise ValueError(f"unknown {op} algo {name!r}; options: "
+                             f"{sorted(algos) + ['auto']}")
+        return name
+
+    def _program_hooks(self, nranks: int, plans: dict,
+                       recorder=None) -> dict:
+        """The event-engine cost hooks of :class:`ProgramExecutor` —
+        shared by the interpreted backend and the compiled backend's
+        recording probe (``recorder`` logs the scheduler's match/barrier
+        firing order without touching the semantics)."""
+        net = self.net
+        cores = self._cores(nranks)
+        core_res = [net.engine.resource(sim.CORE, c) for c in cores]
+
+        def compute(rank: int, us: float, t: float) -> float:
+            return core_res[rank].acquire(t, us) + us
+
+        def p2p(src: int, dst: int, nbytes: int, tag: int,
+                t_send: float, t_recv: float) -> tuple[float, float]:
+            if recorder is not None:
+                recorder.p2p(src, dst, tag)
+            res = net.isend(cores[src], cores[dst], nbytes, t_send, t_recv)
+            return res.t_send_done, res.t_recv_done
+
+        def collective(op: str, nbytes: int, algo: str,
+                       enters: list[float]) -> list[float]:
+            n = len(enters)
+            if n < 2:
+                if recorder is not None:
+                    recorder.coll(None)
+                return list(enters)
+            name = self._resolve_collective_schedule(op, nbytes, algo,
+                                                     plans)
+            if recorder is not None:
+                recorder.coll(name)
+            if name == "accel":
+                from repro.core.exanet.allreduce_accel import accel_cost_us
+                t = max(enters) + accel_cost_us(nbytes, n, self.p)
+                return [t] * n
+            res = self.run_schedule(COLLECTIVE_SCHEDULES[op][name](),
+                                    nbytes, n, backend="interp",
+                                    t0=list(enters), reset=False)
+            shift = res.latency_us - max(res.clocks)
+            return [c + shift for c in res.clocks]
+
+        return {"compute": compute, "p2p": p2p, "collective": collective}
+
+    def _plan_program_sites(self, prog, plans: dict | None) -> dict:
+        if plans is None and prog.nranks >= 2 and any(
+                c.algo == "auto" and c.op == "allreduce"
+                for c in prog.collectives()):
+            plans = self.planner.plan_program(prog)
+        return plans or {}
+
+    def _program_splices_profitable(self, prog, plans: dict) -> bool:
+        """Would every embedded collective site's compiled splice beat
+        interpreting it?  Serial-chain schedules (the ring's ``r -> r+1``
+        DMA coupling) degenerate to one send per level, where replaying
+        thousands of one-send array steps is an order of magnitude
+        *slower* than the interpreter — the same
+        :meth:`compiled_profitable` gate ``run_schedule``'s auto backend
+        applies, lifted to whole programs so ``run_program(backend=
+        "auto")`` can never pick a losing executor."""
+        if prog.nranks < 2:
+            return True
+        for c in prog.collectives():
+            name = self._resolve_collective_schedule(c.op, c.nbytes,
+                                                     c.algo, plans)
+            if name == "accel":
+                continue
+            if not self.compiled_profitable(
+                    COLLECTIVE_SCHEDULES[c.op][name](), prog.nranks):
+                return False
+        return True
+
+    def program_artifact(self, prog):
+        """The cached compiled artifact of a Program *structure*
+        (:meth:`repro.core.program.Program.structure_key`): payload data
+        — byte sizes, compute microseconds — binds per column, so two
+        differently-parameterized emissions of one builder (a weak/strong
+        sweep at fixed rank count, every iteration of an app) share one
+        lowering.  Structure mismatches at bind raise
+        :class:`ProgramStructureError` — content-keyed caching is what
+        makes builders that close over mutable state safe."""
+        cache = getattr(self, "_app_program_cache", None)
+        if cache is None:
+            cache = self._app_program_cache = {}
+        key = prog.structure_key()
+        art = cache.get(key)
+        if art is None:
+            from repro.core.exanet.program_compiled import compile_program_ir
+            art = cache[key] = compile_program_ir(self, prog)
+        return art
+
+    def run_program(self, prog, *, plans: dict | None = None,
+                    backend: str = "auto"):
         """Execute a :class:`repro.core.program.Program` on the event engine.
 
         Every rank's ops run concurrently: ``Compute`` occupies the rank's
@@ -352,8 +469,19 @@ class ExanetMPI:
         simultaneous flows from *all* ranks contend on the shared
         R5/DMA/link resources — full-machine halo congestion is emergent,
         not modeled), and embedded ``Collective`` ops replay their
-        schedule via :meth:`run_schedule` with the ranks' skewed entry
-        clocks and the engine's live occupancy.
+        schedule with the ranks' skewed entry clocks and the engine's
+        live occupancy.
+
+        ``backend`` selects the executor: ``"interp"`` (the
+        :class:`ProgramExecutor` heap scheduler over per-send engine
+        calls — the reference semantics), ``"compiled"`` (the program
+        lowered to vectorized level programs by
+        :mod:`repro.core.exanet.program_compiled`, equal to ~1e-9; embedded
+        collectives splice their compiled
+        :class:`~repro.core.exanet.exec_compiled.RoundProgram`\\ s), or
+        ``"auto"`` (compiled at paper scale —
+        :data:`PROGRAM_COMPILED_AUTO_MIN_RANKS` — when tracing is off,
+        interpreted otherwise).
 
         ``Collective(algo="auto")`` sites are planned in one pass by the
         :class:`~repro.core.planner.CollectivePlanner` *before* execution
@@ -366,57 +494,113 @@ class ExanetMPI:
         (per-rank completion clocks, total compute, send/collective
         counts).
         """
+        if backend not in ("auto", "interp", "compiled"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"options: ['auto', 'compiled', 'interp']")
         from repro.core.program import ProgramExecutor
         nranks = prog.nranks
-        if plans is None and nranks >= 2 and any(
-                c.algo == "auto" and c.op == "allreduce"
-                for c in prog.collectives()):
-            plans = self.planner.plan_program(prog)
-        plans = plans or {}
-        net = self.net
-        cores = self._cores(nranks)
-        core_res = [net.engine.resource(sim.CORE, c) for c in cores]
-        net.reset()
-
-        def compute(rank: int, us: float, t: float) -> float:
-            return core_res[rank].acquire(t, us) + us
-
-        def p2p(src: int, dst: int, nbytes: int, tag: int,
-                t_send: float, t_recv: float) -> tuple[float, float]:
-            res = net.isend(cores[src], cores[dst], nbytes, t_send, t_recv)
-            return res.t_send_done, res.t_recv_done
-
-        def collective(op: str, nbytes: int, algo: str,
-                       enters: list[float]) -> list[float]:
-            n = len(enters)
-            if n < 2:
-                return list(enters)
-            algos = COLLECTIVE_SCHEDULES.get(op)
-            if algos is None:
-                raise ValueError(f"unknown collective op {op!r}; options: "
-                                 f"{sorted(COLLECTIVE_SCHEDULES)}")
-            name = algo
-            if algo == "auto":
-                plan = plans.get((op, int(nbytes)))
-                # non-allreduce ops have a single shipped schedule each
-                name = plan.schedule if plan is not None else \
-                    next(iter(algos))
-            if name == "accel":
-                from repro.core.exanet.allreduce_accel import accel_cost_us
-                t = max(enters) + accel_cost_us(nbytes, n, self.p)
-                return [t] * n
-            cls = algos.get(name)
-            if cls is None:
-                raise ValueError(f"unknown {op} algo {name!r}; options: "
-                                 f"{sorted(algos) + ['auto']}")
-            res = self.run_schedule(cls(), nbytes, n, backend="interp",
-                                    t0=list(enters), reset=False)
-            shift = res.latency_us - max(res.clocks)
-            return [c + shift for c in res.clocks]
-
+        default_plans = plans is None
+        tracing = self.net.engine.tracing
+        if backend == "compiled" and tracing:
+            raise ValueError("compiled backend records no per-send trace; "
+                             "use backend='interp' (or trace=False)")
+        if backend == "compiled" or (
+                backend == "auto" and not tracing
+                and nranks >= self.PROGRAM_COMPILED_AUTO_MIN_RANKS):
+            try:
+                # memoized per program *identity*: iterating an app
+                # replays the same (artifact, binding) without re-walking
+                # the IR for plans, structure key or payload extraction.
+                # Keyed by id() — hashing a frozen Program would deep-hash
+                # every op tuple on every call — with a weakref guard so a
+                # recycled id can never alias a dead program.
+                import weakref
+                memo = getattr(self, "_prog_run_memo", None)
+                if memo is None:
+                    memo = self._prog_run_memo = {}
+                ent = memo.get(id(prog)) if default_plans else None
+                if ent is None or ent[0]() is not prog:
+                    plans = self._plan_program_sites(prog, plans)
+                    if backend == "auto" and \
+                            not self._program_splices_profitable(prog,
+                                                                 plans):
+                        raise ProgramStructureError(
+                            "serial-chain collective site")
+                    art = self.program_artifact(prog)
+                    ent = (weakref.ref(
+                        prog, lambda _, k=id(prog): memo.pop(k, None)),
+                        art, art.bind((prog,), (plans,)))
+                    if default_plans:
+                        memo[id(prog)] = ent
+                return ent[1].run(ent[2])[0]
+            except ProgramStructureError:
+                if backend == "compiled":
+                    raise
+        # `plans` is already the resolved dict when the compiled branch
+        # fell back after planning — _plan_program_sites passes it through
+        plans = self._plan_program_sites(prog, plans)
+        hooks = self._program_hooks(nranks, plans)
+        self.net.reset()
         return ProgramExecutor(
-            prog, compute=compute, p2p=p2p, collective=collective,
+            prog, **hooks,
             post_overhead_us=self.p.a53_call_overhead_us).run()
+
+    def run_program_many(self, progs, *, plans=None,
+                         backend: str = "auto") -> list:
+        """Execute many Programs, batching structurally-identical ones
+        through one compiled artifact (columns of a single vectorized
+        replay) — the weak/strong sweep workload.  ``plans`` is an
+        optional per-program list.  Results keep input order; programs
+        below the auto threshold (or whose batch the compiler rejects)
+        fall back per program."""
+        if backend not in ("auto", "interp", "compiled"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"options: ['auto', 'compiled', 'interp']")
+        progs = list(progs)
+        tracing = self.net.engine.tracing
+        if backend == "compiled" and tracing:
+            # validate before planning: the planner simulates candidates
+            # on this engine (resetting occupancy, polluting the trace)
+            raise ValueError("compiled backend records no per-send trace; "
+                             "use backend='interp' (or trace=False)")
+        if plans is None:
+            plans_list = [None] * len(progs)
+        else:
+            plans_list = list(plans)
+            if len(plans_list) != len(progs) or not all(
+                    pl is None or isinstance(pl, dict)
+                    for pl in plans_list):
+                raise ValueError(
+                    "plans must be a per-program sequence of plan dicts "
+                    f"(or None) matching len(progs)={len(progs)}")
+        resolved = [self._plan_program_sites(p, pl)
+                    for p, pl in zip(progs, plans_list)]
+        out: list = [None] * len(progs)
+        groups: dict[tuple, list[int]] = {}
+        for i, p in enumerate(progs):
+            if backend == "interp" or (backend == "auto" and (
+                    tracing
+                    or p.nranks < self.PROGRAM_COMPILED_AUTO_MIN_RANKS
+                    or not self._program_splices_profitable(
+                        p, resolved[i]))):
+                out[i] = self.run_program(p, plans=resolved[i],
+                                          backend="interp")
+            else:
+                groups.setdefault(p.structure_key(), []).append(i)
+        for idxs in groups.values():
+            try:
+                art = self.program_artifact(progs[idxs[0]])
+                bound = art.bind([progs[i] for i in idxs],
+                                 [resolved[i] for i in idxs])
+                for i, r in zip(idxs, art.run(bound)):
+                    out[i] = r
+            except ProgramStructureError:
+                if backend == "compiled":
+                    raise
+                for i in idxs:  # retry singly (compiled, then interp)
+                    out[i] = self.run_program(progs[i], plans=resolved[i],
+                                              backend="auto")
+        return out
 
     def _step_class(self, src: int, dst: int) -> str:
         d = abs(dst - src) * (self.p.cores_per_mpsoc if self._rpm == 1 else 1)

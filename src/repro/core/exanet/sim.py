@@ -260,8 +260,11 @@ def segmented_maxplus_scan(dur: np.ndarray, t_plus_dur: np.ndarray,
     if takes is None:
         takes = scan_take_masks(first, max_group)
     for s, mask in takes:
-        T[s:] = np.where(mask, np.maximum(T[:-s] + D[s:], T[s:]), T[s:])
-        D[s:] = np.where(mask, D[:-s] + D[s:], D[s:])
+        # masked in-place ufuncs: numpy detects the self-overlap and
+        # buffers internally, so this is the np.where form minus the
+        # intermediate allocations (the scans are the replay hot loop)
+        np.maximum(T[:-s] + D[s:], T[s:], out=T[s:], where=mask)
+        np.add(D[:-s], D[s:], out=D[s:], where=mask)
     return D, T
 
 
@@ -272,5 +275,5 @@ def segmented_running_max(v: np.ndarray, takes: list) -> np.ndarray:
     — one plain-max scan over ``v = t - k d`` instead of the (D, T)
     composition)."""
     for s, mask in takes:
-        v[s:] = np.where(mask, np.maximum(v[:-s], v[s:]), v[s:])
+        np.maximum(v[:-s], v[s:], out=v[s:], where=mask)
     return v

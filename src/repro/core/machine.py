@@ -135,11 +135,22 @@ class MachineModel(Protocol):
         ...
 
     def cost_program(self, prog, *, fidelity: str = "analytic",
-                     level: str | None = None) -> float:
+                     level: str | None = None,
+                     backend: str = "auto") -> float:
         """Predicted seconds for one execution of a whole
         :class:`repro.core.program.Program` (compute + point-to-point +
         embedded collectives, with whatever overlap the program
-        expresses)."""
+        expresses).  ``backend`` selects the sim-fidelity executor
+        (``"auto"`` | ``"compiled"`` | ``"interp"``); machines without an
+        event simulator ignore it."""
+        ...
+
+    def cost_program_many(self, progs, *, fidelity: str = "analytic",
+                          level: str | None = None,
+                          backend: str = "auto") -> list[float]:
+        """Batched :meth:`cost_program` — the planner-facing surface the
+        sweep consumers call; simulated machines batch
+        structurally-identical programs through one compiled replay."""
         ...
 
 
@@ -196,16 +207,27 @@ class TpuMachine:
                             level=level) for s in sizes]
 
     def cost_program(self, prog, *, fidelity: str = "analytic",
-                     level: str | None = None) -> float:
+                     level: str | None = None,
+                     backend: str = "auto") -> float:
         """Closed-form program time: the TPU target has no event
         simulator, so both fidelities are the contention-free alpha-beta
-        walk of :func:`repro.core.program.analytic_program_us`."""
+        walk of :func:`repro.core.program.analytic_program_us` (and
+        ``backend`` — an executor choice for *simulated* programs — has
+        nothing to select)."""
         from repro.core.program import analytic_program_us
         alpha, bw = self.alpha_beta(level or INTRA)
         res = analytic_program_us(
             prog, alpha_us=alpha * 1e6, bw_bytes_per_us=bw * 1e-6,
             coll_cost_us=_analytic_coll_us(prog.nranks, alpha, bw))
         return res.latency_us * 1e-6
+
+    def cost_program_many(self, progs, *, fidelity: str = "analytic",
+                          level: str | None = None,
+                          backend: str = "auto") -> list[float]:
+        """Batched :meth:`cost_program`: closed forms share no work, so
+        this is the plain loop (uniform planner-facing surface)."""
+        return [self.cost_program(p, fidelity=fidelity, level=level,
+                                  backend=backend) for p in progs]
 
     def memory_pass_s(self, nbytes: int) -> float:
         """One streaming read+write pass over a buffer (HBM roundtrip)."""
@@ -340,20 +362,24 @@ class ExanetMachine:
         return [float(us) * 1e-6 for us in res.latency_us]
 
     def cost_program(self, prog, *, fidelity: str = "sim",
-                     level: str | None = None) -> float:
+                     level: str | None = None,
+                     backend: str = "auto") -> float:
         """Program cost on the prototype.  ``fidelity="sim"`` executes the
         program on the event engine of the tier that fits its rank count
         (:meth:`ExanetMPI.run_program`: per-rank cores, contending
-        point-to-point flows, embedded collectives at live occupancy);
-        ``"analytic"`` is the contention-free alpha-beta walk — their gap
-        *is* the congestion the retired apps ``alpha`` used to paper
-        over."""
+        point-to-point flows, embedded collectives at live occupancy) with
+        the chosen executor ``backend`` — ``"auto"`` compiles paper-scale
+        programs to vectorized level programs
+        (:mod:`repro.core.exanet.program_compiled`), which is what makes
+        1024-4096-rank weak-scaling queries answerable; ``"analytic"`` is
+        the contention-free alpha-beta walk — their gap *is* the
+        congestion the retired apps ``alpha`` used to paper over."""
         nranks = prog.nranks
         if nranks < 1:
             return 0.0
         if fidelity == "sim":
             mpi = self._mpi_for(nranks)
-            return mpi.run_program(prog).latency_us * 1e-6
+            return mpi.run_program(prog, backend=backend).latency_us * 1e-6
         alpha, bw = self.alpha_beta(level or self._default_level(nranks))
         from repro.core.program import analytic_program_us
         res = analytic_program_us(
@@ -361,6 +387,32 @@ class ExanetMachine:
             coll_cost_us=_analytic_coll_us(nranks, alpha, bw,
                                            accel_params=self.params))
         return res.latency_us * 1e-6
+
+    def cost_program_many(self, progs, *, fidelity: str = "sim",
+                          level: str | None = None,
+                          backend: str = "auto") -> list[float]:
+        """Batched :meth:`cost_program` over many programs.  At ``sim``
+        fidelity, programs are grouped per machine tier and handed to
+        :meth:`ExanetMPI.run_program_many`, where structurally-identical
+        emissions (a weak/strong sweep at one rank count) become columns
+        of a single compiled replay."""
+        progs = list(progs)
+        if fidelity != "sim":
+            return [self.cost_program(p, fidelity=fidelity, level=level,
+                                      backend=backend) for p in progs]
+        out: list[float] = [0.0] * len(progs)
+        tiers: dict[int, list[int]] = {}
+        for i, p in enumerate(progs):
+            if p.nranks < 1:
+                continue
+            tiers.setdefault(id(self._mpi_for(p.nranks)), []).append(i)
+        for idxs in tiers.values():
+            mpi = self._mpi_for(progs[idxs[0]].nranks)
+            results = mpi.run_program_many([progs[i] for i in idxs],
+                                           backend=backend)
+            for i, r in zip(idxs, results):
+                out[i] = r.latency_us * 1e-6
+        return out
 
     def memory_pass_s(self, nbytes: int) -> float:
         """One read+write pass on an A53 endpoint (single DDR4 channel is

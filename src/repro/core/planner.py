@@ -216,10 +216,14 @@ class CollectivePlanner:
         at ``sim`` fidelity all sizes of one candidate schedule share a
         single compiled round program instead of being event-interpreted
         per site.  Returns ``{(op, nbytes): Plan}`` — the mapping
-        :meth:`repro.core.exanet.mpi.ExanetMPI.run_program` consumes.
-        Only allreduce sites have multiple candidates today; other ops
-        fall back to their single shipped schedule at execution time and
-        need no plan.
+        :meth:`repro.core.exanet.mpi.ExanetMPI.run_program` consumes on
+        *both* executors: the interpreter resolves each site through
+        ``ExanetMPI._resolve_collective_schedule`` at barrier time, and
+        the compiled backend resolves through the same method at bind
+        time to pick which compiled ``RoundProgram`` to splice — one
+        resolution rule, two executors (DESIGN.md §2.5).  Only allreduce
+        sites have multiple candidates today; other ops fall back to
+        their single shipped schedule at execution time and need no plan.
         """
         sites: dict[str, set[int]] = {}
         for c in prog.collectives():

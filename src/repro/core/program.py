@@ -129,6 +129,35 @@ class Program:
                 c[k] = c.get(k, 0) + 1
         return c
 
+    def structure_key(self) -> tuple:
+        """Hashable fingerprint of the program's *structure*: op kinds,
+        peers, tags, handles and collective (op, algo) — everything except
+        the bindable payload data (``Compute.us``, ``Isend``/``Irecv``/
+        ``Collective.nbytes``).  Two programs with equal keys have
+        identical FIFO channel matchings, wait sets and collective sites,
+        so a compiled execution artifact
+        (:mod:`repro.core.exanet.program_compiled`) lowered for one can be
+        re-bound with the other's sizes — the Program analog of
+        ``RoundProgram``'s per-(schedule, nranks) cache key."""
+        sig = []
+        for ops in self.rank_ops:
+            row = []
+            for op in ops:
+                if isinstance(op, Compute):
+                    row.append(("c",))
+                elif isinstance(op, Isend):
+                    row.append(("s", op.dst, op.tag, op.handle))
+                elif isinstance(op, Irecv):
+                    row.append(("r", op.src, op.tag, op.handle))
+                elif isinstance(op, Wait):
+                    row.append(("w", op.handles))
+                elif isinstance(op, Collective):
+                    row.append(("x", op.op, op.algo))
+                else:
+                    row.append(("?", repr(op)))
+            sig.append(tuple(row))
+        return (self.nranks, tuple(sig))
+
     def validate(self) -> None:
         n = self.nranks
         for r, ops in enumerate(self.rank_ops):

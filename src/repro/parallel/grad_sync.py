@@ -183,6 +183,31 @@ def emit_sync_program(nranks: int, bucket_bytes_list, *,
     return Program(tuple(tuple(ops) for _ in range(nranks)))
 
 
+def cost_sync_program_s(machine, nranks: int, bucket_bytes_list, *,
+                        compute_us_per_bucket=0.0, algo: str = "auto",
+                        fidelity: str = "sim",
+                        backend: str = "auto") -> float:
+    """Predicted seconds of one bucketed gradient sync on a machine: the
+    :func:`emit_sync_program` emission costed through
+    :meth:`MachineModel.cost_program`.  At ``sim`` fidelity on the ExaNeSt
+    machine, ``backend="auto"`` replays the bucket pipeline as a compiled
+    level program (collective sites splice their compiled round programs),
+    so sweeping bucket layouts is a batched array workload instead of
+    per-bucket event interpretation.  Pure host-side: no jax, callable
+    from tests and benchmarks without devices."""
+    import inspect
+    prog = emit_sync_program(nranks, bucket_bytes_list,
+                             compute_us_per_bucket=compute_us_per_bucket,
+                             algo=algo)
+    kw = {"fidelity": fidelity}
+    # signature probe, not try/except TypeError: a genuine TypeError from
+    # inside a machine's sim path must surface, not trigger a silent
+    # backend-less recomputation
+    if "backend" in inspect.signature(machine.cost_program).parameters:
+        kw["backend"] = backend
+    return machine.cost_program(prog, **kw)
+
+
 class CompressedSync:
     """EF-SGD-style error feedback (Karimireddy et al. 2019): the residual
     of the *local* quantization is carried into the next step, keeping the

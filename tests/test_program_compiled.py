@@ -1,0 +1,329 @@
+"""Compiled Program-IR executor: equivalence with the interpreter +
+backend plumbing (DESIGN.md §2.5, the Program half).
+
+The compiled backend (``program_compiled``) must reproduce the
+interpreted ``run_program`` — latencies, per-rank clocks, send and
+collective counts — to ~1e-9 relative across random halo grids, tag
+permutations, mixed eager/rendez-vous sizes, per-rank compute skew and
+embedded collectives, for both rank placements.  Mirrors
+``test_exec_compiled.py``'s 60-seed determinism harness; the hypothesis
+twin lives at the bottom of this file.
+"""
+
+import random
+
+import pytest
+
+from repro.core.exanet import ExanetMPI
+from repro.core.exanet.exec_compiled import ProgramStructureError
+from repro.core.program import (Collective, Compute, Irecv, Isend, Program,
+                                Wait, bsp_step, cg_iteration, halo3d)
+
+#: straddles mpi_eager_max_bytes (32) and the 16 KB RDMA block size
+BYTES = (0, 1, 31, 32, 33, 100, 4096, 65536, 300000)
+
+
+def _assert_equal(a, b, tag, rel=1e-9):
+    assert b.latency_us == pytest.approx(a.latency_us, rel=rel), tag
+    assert a.n_sends == b.n_sends, tag
+    assert a.n_collectives == b.n_collectives, tag
+    for x, y in zip(a.clocks, b.clocks):
+        assert y == pytest.approx(x, rel=rel, abs=1e-12), tag
+    for x, y in zip(a.compute_us, b.compute_us):
+        assert y == pytest.approx(x, rel=rel, abs=1e-12), tag
+
+
+@pytest.fixture(scope="module", params=[None, 1], ids=["rpm4", "rpm1"])
+def mpi(request):
+    return ExanetMPI(ranks_per_mpsoc=request.param)
+
+
+def _check(mpi, prog, tag):
+    a = mpi.run_program(prog, backend="interp")
+    b = mpi.run_program(prog, backend="compiled")
+    _assert_equal(a, b, tag)
+    return a, b
+
+
+# ------------------------------------------------------------- builders
+@pytest.mark.parametrize("face", [1, 31, 33, 4096, 300000])
+def test_halo3d_compiled_matches_interp(mpi, face):
+    for nranks, grid in ((8, None), (12, None), (16, (4, 2, 2)),
+                         (2, None)):
+        _check(mpi, halo3d(nranks, face, 12.5, grid=grid),
+               ("halo", nranks, face))
+
+
+def test_overlap_and_selective_waits(mpi):
+    _check(mpi, halo3d(8, 4096, 40.0, overlap=True), "overlap")
+    ops0 = (Isend(1, 300000, tag=1, handle="a"),
+            Isend(1, 8, tag=2, handle="b"), Wait(("a",)), Compute(5.0),
+            Wait(("b",)))
+    ops1 = (Irecv(0, 300000, tag=1), Irecv(0, 8, tag=2), Wait(),
+            Compute(2.0))
+    _check(mpi, Program((ops0, ops1)), "named-handles")
+
+
+@pytest.mark.parametrize("algo", ["recursive_doubling", "oneshot",
+                                  "rabenseifner", "auto"])
+def test_cg_iteration_with_embedded_collectives(mpi, algo):
+    _check(mpi, cg_iteration(8, 70000, 30.0, coll_algo=algo),
+           ("cg", algo))
+
+
+def test_bsp_and_non_allreduce_collectives(mpi):
+    _check(mpi, bsp_step(8, 10.0, "allreduce", 4096), "bsp")
+    for op in ("bcast", "allgather", "barrier", "alltoall"):
+        ops = tuple((Compute(3.0), Collective(op, 512, "auto"))
+                    for _ in range(8))
+        _check(mpi, Program(ops), ("coll", op))
+
+
+def test_single_rank_program(mpi):
+    prog = Program(((Compute(7.0), Collective("allreduce", 64, "auto")),))
+    _check(mpi, prog, "single-rank")
+
+
+def test_deep_wait_chain_compiles_iteratively():
+    """A rank with hundreds of sequential post/Wait phases must lower
+    without recursion limits (the Wait-chain resolution is iterative)."""
+    phases = 1200
+    ops0 = tuple(x for _ in range(phases)
+                 for x in (Isend(1, 64, 0), Wait()))
+    ops1 = tuple(x for _ in range(phases)
+                 for x in (Irecv(0, 64, 0), Wait()))
+    _check(ExanetMPI(), Program((ops0, ops1)), "deep-chain")
+
+
+def test_degenerate_programs(mpi):
+    """No posts at all (collective-only, the emit_sync_program shape with
+    zero compute) and pure-compute programs lower to empty item/event
+    tables — regression for the empty boolean-mask dtype."""
+    colls_only = Program(tuple((Collective("allreduce", 4096, "auto"),)
+                               for _ in range(8)))
+    _check(mpi, colls_only, "colls-only")
+    pure = Program(tuple((Compute(5.0),) for _ in range(4)))
+    a, b = _check(mpi, pure, "pure-compute")
+    assert b.latency_us == 5.0
+
+
+# ------------------------------------------------------------------ fuzz
+def _fuzz_program(rng, nranks):
+    """Random halo-shaped program: random grid/tag bijection, per-channel
+    random sizes (mixed eager/rendez-vous), random per-rank compute skew,
+    optional overlap and trailing embedded collectives."""
+    template = halo3d(nranks, 1, 0.0)
+    tagmap = list(range(6))
+    rng.shuffle(tagmap)
+    sizes: dict = {}
+
+    def size_of(src, dst, tag):
+        return sizes.setdefault((src, dst, tag), rng.choice(BYTES))
+
+    colls = []
+    if nranks & (nranks - 1) == 0 and rng.random() < 0.6:
+        for _ in range(rng.randint(1, 2)):
+            colls.append(Collective(
+                "allreduce", rng.choice([8, 64, 4096, 70000]),
+                rng.choice(["recursive_doubling", "oneshot", "auto"])))
+    overlap = rng.random() < 0.4
+    ranks = []
+    for r in range(nranks):
+        ops = []
+        if rng.random() < 0.5:
+            ops.append(Compute(rng.uniform(0.0, 30.0)))
+        for op in template.rank_ops[r]:
+            if isinstance(op, Irecv):
+                t = tagmap[op.tag]
+                ops.append(Irecv(op.src, size_of(op.src, r, t), t))
+            elif isinstance(op, Isend):
+                t = tagmap[op.tag]
+                ops.append(Isend(op.dst, size_of(r, op.dst, t), t))
+            else:   # the Wait
+                if overlap:
+                    ops.append(Compute(rng.uniform(0.0, 20.0)))
+                ops.append(op)
+        if rng.random() < 0.4:
+            ops.append(Compute(rng.uniform(0.0, 10.0)))
+        ops.extend(colls)
+        ranks.append(tuple(ops))
+    return Program(tuple(ranks))
+
+
+def test_seeded_fuzz_compiled_equals_interp():
+    """Deterministic fuzz across random programs (the hypothesis twin is
+    below): per-rank clock skew makes the scheduler's firing order
+    data-dependent, which is exactly what the probe-recorded tape must
+    capture."""
+    mpis = {rpm: ExanetMPI(ranks_per_mpsoc=rpm) for rpm in (None, 1)}
+    for seed in range(60):
+        rng = random.Random(seed)
+        nranks = rng.choice([2, 4, 6, 8, 12, 16])
+        prog = _fuzz_program(rng, nranks)
+        m = mpis[rng.choice([None, 1])]
+        a = m.run_program(prog, backend="interp")
+        b = m.run_program(prog, backend="compiled")
+        _assert_equal(a, b, ("fuzz", seed))
+
+
+# ------------------------------------------------- rebinding / the cache
+def test_one_artifact_serves_a_size_sweep(mpi):
+    """One compiled structure, many bindings (the weak/strong sweep
+    workload): every binding must match its own interpreted run, and the
+    wave-structured halo tape must be shared across them."""
+    progs = [halo3d(16, nb, us) for nb, us in
+             ((16, 5.0), (1024, 50.0), (65536, 0.25), (300000, 11.0))]
+    art = mpi.program_artifact(progs[0])
+    for p in progs[1:]:
+        assert mpi.program_artifact(p) is art
+    outs = art.run(art.bind(progs))
+    for p, b in zip(progs, outs):
+        _assert_equal(mpi.run_program(p, backend="interp"), b, "rebind")
+    assert len(art._tape_cache) == 1  # halo tapes are size-invariant
+
+
+def test_differently_parameterized_halo3d_share_nranks():
+    """Regression (satellite): two differently-parameterized emissions of
+    one builder at the same rank count share a structure — the cache must
+    serve both *correctly* (content-keyed binding), never replay the
+    first program's numbers for the second."""
+    mpi = ExanetMPI()
+    p1 = halo3d(8, 1024, 10.0)
+    p2 = halo3d(8, 300000, 3.0)
+    assert p1.structure_key() == p2.structure_key()
+    a1, b1 = _check(mpi, p1, "p1")
+    a2, b2 = _check(mpi, p2, "p2")
+    # the stale-cache failure mode: identical outputs for distinct inputs
+    assert abs(a1.latency_us - a2.latency_us) > 1e-6
+    assert mpi.program_artifact(p1) is mpi.program_artifact(p2)
+
+
+def test_bind_rejects_structure_mismatch(mpi):
+    art = mpi.program_artifact(halo3d(8, 1024, 10.0))
+    with pytest.raises(ProgramStructureError):
+        art.bind([halo3d(16, 1024, 10.0)])
+    with pytest.raises(ProgramStructureError):
+        art.bind([halo3d(8, 1024, 10.0, grid=(8, 1, 1))])
+
+
+def test_rank_inconsistent_collective_rejected_even_cache_warm():
+    """Regression: collective nbytes are excluded from structure_key, so
+    a rank-inconsistent site must be rejected at extract time — never
+    aliased onto a warm consistent binding (the interpreter rejects the
+    same program at barrier time)."""
+    from repro.core.program import ProgramError
+    mpi = ExanetMPI()
+    good = Program(tuple(
+        (Compute(1.0), Collective("allreduce", 1024, "recursive_doubling"))
+        for _ in range(2)))
+    bad = Program((
+        (Compute(1.0), Collective("allreduce", 1024,
+                                  "recursive_doubling")),
+        (Compute(1.0), Collective("allreduce", 2048,
+                                  "recursive_doubling"))))
+    assert good.structure_key() == bad.structure_key()
+    mpi.run_program(good, backend="compiled")   # warm the bind cache
+    for be in ("interp", "compiled"):
+        with pytest.raises(ProgramError, match="collective mismatch"):
+            mpi.run_program(bad, backend=be)
+
+
+def test_auto_avoids_serial_chain_collective_splices(monkeypatch):
+    """Regression: a program whose collective sites resolve to a
+    serial-chain schedule (ring) must stay interpreted under auto — the
+    one-send-per-level splice replay is slower than the interpreter (the
+    run_schedule auto gate, lifted to programs)."""
+    mpi = ExanetMPI()
+    monkeypatch.setattr(ExanetMPI, "PROGRAM_COMPILED_AUTO_MIN_RANKS", 2)
+    ring = Program(tuple((Collective("allreduce", 12288, "ring"),)
+                         for _ in range(8)))
+    wide = Program(tuple((Collective("allreduce", 12288,
+                                     "recursive_doubling"),)
+                         for _ in range(8)))
+    assert not mpi._program_splices_profitable(ring, {})
+    assert mpi._program_splices_profitable(wide, {})
+    a = mpi.run_program(ring, backend="auto")
+    b = mpi.run_program(ring, backend="interp")
+    _assert_equal(a, b, "ring-auto")
+    assert ring.structure_key() not in getattr(mpi, "_app_program_cache",
+                                               {})
+
+
+# ----------------------------------------------------- backend selection
+def test_unknown_backend_rejected(mpi):
+    with pytest.raises(ValueError, match="backend"):
+        mpi.run_program(halo3d(4, 64, 1.0), backend="jit")
+
+
+def test_compiled_rejects_tracing_engine():
+    mpi = ExanetMPI(trace=True)
+    prog = halo3d(4, 64, 1.0)
+    with pytest.raises(ValueError, match="trace"):
+        mpi.run_program(prog, backend="compiled")
+    # auto silently stays on the interpreter (and records the trace)
+    res = mpi.run_program(prog)
+    assert res.latency_us > 0 and len(mpi.net.trace) > 0
+
+
+def test_auto_compiles_at_threshold(monkeypatch):
+    mpi = ExanetMPI()
+    monkeypatch.setattr(ExanetMPI, "PROGRAM_COMPILED_AUTO_MIN_RANKS", 2)
+    prog = halo3d(8, 4096, 10.0)
+    a = mpi.run_program(prog, backend="interp")
+    b = mpi.run_program(prog, backend="auto")
+    _assert_equal(a, b, "auto")
+    assert prog.structure_key() in mpi._app_program_cache
+
+
+def test_run_program_many_batches_and_orders(monkeypatch):
+    monkeypatch.setattr(ExanetMPI, "PROGRAM_COMPILED_AUTO_MIN_RANKS", 2)
+    mpi = ExanetMPI()
+    progs = [halo3d(8, 1024, 5.0), cg_iteration(8, 4096, 10.0),
+             halo3d(8, 65536, 7.0), halo3d(6, 512, 3.0)]
+    outs = mpi.run_program_many(progs)
+    refs = [mpi.run_program(p, backend="interp") for p in progs]
+    for i, (a, b) in enumerate(zip(refs, outs)):
+        _assert_equal(a, b, ("many", i))
+
+
+# --------------------------------------------------------- machine layer
+def test_cost_program_backends_agree():
+    from repro.core.machine import ExanetMachine
+    m = ExanetMachine()
+    prog = cg_iteration(16, 70000, 25.0)
+    ci = m.cost_program(prog, backend="interp")
+    cc = m.cost_program(prog, backend="compiled")
+    assert cc == pytest.approx(ci, rel=1e-9)
+    batch = m.cost_program_many([prog, halo3d(16, 1024, 5.0)],
+                                backend="compiled")
+    assert batch[0] == pytest.approx(ci, rel=1e-9)
+
+
+def test_grad_sync_program_cost_compiled():
+    from repro.core.machine import ExanetMachine, TpuMachine
+    from repro.parallel.grad_sync import cost_sync_program_s
+    m = ExanetMachine()
+    buckets = [1 << 20, 1 << 20, 4096]
+    a = cost_sync_program_s(m, 16, buckets, compute_us_per_bucket=50.0,
+                            backend="interp")
+    b = cost_sync_program_s(m, 16, buckets, compute_us_per_bucket=50.0,
+                            backend="compiled")
+    assert b == pytest.approx(a, rel=1e-9)
+    assert cost_sync_program_s(TpuMachine(), 16, buckets) > 0
+
+
+def test_apps_compiled_backend_agrees_at_512():
+    """The Table 3 pipeline runs on backend="auto" (compiled at 512):
+    its numbers must be interpreter numbers to well below the 0.1-point
+    rounding of the published table."""
+    from repro.core.exanet.apps import hpcg
+    m = hpcg()
+    a = m.simulate_iteration("weak", 512, backend="interp")
+    b = m.simulate_iteration("weak", 512, backend="compiled")
+    _assert_equal(a, b, "hpcg-512")
+    assert b.comm_us == pytest.approx(a.comm_us, rel=1e-9)
+
+
+# The hypothesis twin of the seeded fuzz lives in tests/test_property.py
+# (the hypothesis-gated module), reusing _fuzz_program/_assert_equal from
+# here.
