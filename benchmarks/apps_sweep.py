@@ -19,9 +19,18 @@ count):
   sweep; the interpreter is timed only through 512 ranks (at 1024 it
   still runs once, for the agreement guard);
 * **beta vs retired alpha** — the per-(app, mode) MPI-stack residual
-  ``beta`` that replaced the old closed-form fudge factor.
+  ``beta`` that replaced the old closed-form fudge factor;
+* **Monte-Carlo scenario rows** (PR 6) — N perturbed scenarios of one
+  iteration (per-scenario compute skew x byte jitter) executed as ONE
+  array program (``run_program_scenarios`` -> ``bind_arrays``: no N
+  Program objects, no N scheduler probes) vs the per-binding lane
+  (``rebind_program`` + ``run_program_many``), fresh random draws every
+  timed repetition so neither lane hits a warm bind cache; batched and
+  per-binding results are cross-checked to <=1e-9 and ``batch_speedup``
+  is recorded per row (schema: DESIGN.md §6).
 
-Run: PYTHONPATH=src python benchmarks/apps_sweep.py [--smoke] [--min-runs N]
+Run: PYTHONPATH=src python benchmarks/apps_sweep.py [--smoke]
+         [--min-runs N] [--engine numpy|jax]
 
 Timing windows have a ``--min-runs`` floor (default 5): a 0.2 s budget
 fits only ~2 interpreted runs at 512 ranks, and single-sample throughput
@@ -58,17 +67,18 @@ AGREEMENT_RTOL = 1e-9
 
 
 def _iterations_per_sec(model, mode: str, n: int, min_wall_s: float,
-                        min_runs: int, backend: str) -> tuple:
+                        min_runs: int, backend: str,
+                        engine: str = "numpy") -> tuple:
     """Simulated app-iterations per wall second (cold costs excluded: the
     first run builds routes/paths — and, for the compiled backend, the
     lowered artifact — then we time steady-state runs)."""
     prog = model.emit_iteration(mode, n)
     mpi = model.mpi_for(n)
-    mpi.run_program(prog, backend=backend)  # warm caches / compile
+    mpi.run_program(prog, backend=backend, engine=engine)  # warm / compile
     runs, wall = 0, 0.0
     t0 = time.perf_counter()
     while wall < min_wall_s or runs < min_runs:
-        mpi.run_program(prog, backend=backend)
+        mpi.run_program(prog, backend=backend, engine=engine)
         runs += 1
         wall = time.perf_counter() - t0
     return runs / wall, runs, wall
@@ -108,7 +118,7 @@ def _row(model, app: str, mode: str, n: int, ev: dict, sim) -> dict:
 
 
 def sweep(ranks: tuple[int, ...], min_wall_s: float,
-          min_runs: int) -> list[dict]:
+          min_runs: int, engine: str = "numpy") -> list[dict]:
     rows = []
     for app, factory in ALL_APPS.items():
         model = factory()
@@ -122,9 +132,11 @@ def sweep(ranks: tuple[int, ...], min_wall_s: float,
                 ips_i, runs_i, wall_i = _iterations_per_sec(
                     model, mode, n, min_wall_s, min_runs, "interp")
                 ips_c, runs_c, wall_c = _iterations_per_sec(
-                    model, mode, n, min_wall_s, min_runs, "compiled")
+                    model, mode, n, min_wall_s, min_runs, "compiled",
+                    engine)
                 row = _row(model, app, mode, n, ev, sim)
                 row.update({
+                    "engine": engine,
                     "agreement_rel": rel,
                     "interp": {"sim_iterations_per_sec": round(ips_i, 1),
                                "timed_runs": runs_i,
@@ -146,7 +158,8 @@ def sweep(ranks: tuple[int, ...], min_wall_s: float,
     return rows
 
 
-def predict_rows(min_wall_s: float, min_runs: int) -> list[dict]:
+def predict_rows(min_wall_s: float, min_runs: int,
+                 engine: str = "numpy") -> list[dict]:
     """Weak-scaling predictions at 1024-4096 ranks: compiled-only timing
     (one interpreted run at 1024 keeps the agreement guard honest at the
     first beyond-prototype tier)."""
@@ -162,10 +175,12 @@ def predict_rows(min_wall_s: float, min_runs: int) -> list[dict]:
                 assert rel <= AGREEMENT_RTOL, \
                     f"{app}/weak@{n}: compiled deviates {rel:.2e}"
             ips_c, runs_c, wall_c = _iterations_per_sec(
-                model, "weak", n, min_wall_s, min_runs, "compiled")
+                model, "weak", n, min_wall_s, min_runs, "compiled",
+                engine)
             row = _row(model, app, "weak", n, ev, sim)
             row.update({
                 "prediction": True,
+                "engine": engine,
                 "agreement_rel": rel,
                 "compiled": {"sim_iterations_per_sec": round(ips_c, 1),
                              "timed_runs": runs_c,
@@ -179,17 +194,106 @@ def predict_rows(min_wall_s: float, min_runs: int) -> list[dict]:
     return rows
 
 
+def scenario_rows(ranks, n_scenarios: int, min_wall_s: float,
+                  min_runs: int, engine: str = "numpy") -> list[dict]:
+    """Monte-Carlo scenario sweeps (PR 6): N perturbed copies of one
+    weak-scaling iteration — per-scenario compute skew (0.9-1.1x) and
+    point-to-point byte jitter (0.8-1.2x) — as ONE array program
+    (``run_program_scenarios``) vs the per-binding lane
+    (``rebind_program`` + ``run_program_many``, which probes each
+    distinct payload).  Every timed repetition draws fresh scales, so
+    neither lane reuses a warm bind; the first draw cross-checks batched
+    against per-binding results to <=1e-9 (and the batched lane against
+    the interpreter via ``check=``)."""
+    import numpy as np
+
+    from repro.core.exanet.program_compiled import (extract_data,
+                                                    rebind_program)
+    rows = []
+    for app, factory in ALL_APPS.items():
+        model = factory()
+        for n in ranks:
+            prog = model.emit_iteration("weak", n)
+            mpi = model.mpi_for(n)
+            mpi.run_program(prog, backend="compiled")  # warm artifact
+            comp, post, _ = extract_data(prog)
+            base_c = np.array(comp, dtype=np.float64)
+            base_p = np.array(post, dtype=np.float64)
+            rng = np.random.default_rng(n)
+
+            def draw():
+                return (rng.uniform(0.9, 1.1, n_scenarios),
+                        rng.uniform(0.8, 1.2, n_scenarios))
+
+            def per_binding(cs, bs):
+                progs = [rebind_program(prog,
+                                        compute_us=base_c * c,
+                                        post_nbytes=np.rint(base_p * b))
+                         for c, b in zip(cs, bs)]
+                return mpi.run_program_many(progs, backend="compiled",
+                                            engine=engine)
+
+            # agreement: batched vs per-binding on one draw, plus the
+            # interpreter cross-check built into run_program_scenarios
+            cs, bs = draw()
+            got = mpi.run_program_scenarios(
+                prog, compute_scale=cs, byte_scale=bs, engine=engine,
+                check=3, rtol=AGREEMENT_RTOL)
+            ref = per_binding(cs, bs)
+            rel = max(abs(g.latency_us - r.latency_us)
+                      / max(abs(r.latency_us), 1e-12)
+                      for g, r in zip(got, ref))
+            assert rel <= AGREEMENT_RTOL, \
+                f"{app}@{n}: scenario batch deviates {rel:.2e}"
+
+            lanes = {}
+            for lane, fn in (("batched", lambda c, b:
+                              mpi.run_program_scenarios(
+                                  prog, compute_scale=c, byte_scale=b,
+                                  engine=engine)),
+                             ("per_binding", per_binding)):
+                runs, wall = 0, 0.0
+                t0 = time.perf_counter()
+                while wall < min_wall_s or runs < min_runs:
+                    c, b = draw()
+                    fn(c, b)
+                    runs += 1
+                    wall = time.perf_counter() - t0
+                lanes[lane] = {
+                    "scenarios_per_sec": round(n_scenarios * runs / wall,
+                                               1),
+                    "timed_runs": runs, "wall_s": round(wall, 4)}
+            row = {"app": app, "mode": "weak", "nranks": n,
+                   "engine": engine, "n_scenarios": n_scenarios,
+                   "agreement_rel": rel, **lanes,
+                   "batch_speedup": round(
+                       lanes["batched"]["scenarios_per_sec"]
+                       / lanes["per_binding"]["scenarios_per_sec"], 2)}
+            rows.append(row)
+            print(f"{app:7s} scen   N={n:4d}  x{n_scenarios}  "
+                  f"batched {lanes['batched']['scenarios_per_sec']:8.1f} "
+                  f"scen/s  per-binding "
+                  f"{lanes['per_binding']['scenarios_per_sec']:8.1f}  "
+                  f"({row['batch_speedup']:.1f}x, agree {rel:.1e})")
+    return rows
+
+
 def main(out_path: str = "BENCH_apps.json", smoke: bool = False,
-         min_runs: int = 5) -> None:
+         min_runs: int = 5, engine: str = "numpy") -> None:
     ranks = SMOKE_RANKS if smoke else RANKS
     min_wall = 0.05 if smoke else 0.2
-    rows = sweep(ranks, min_wall, min_runs)
-    preds = [] if smoke else predict_rows(min_wall, min_runs)
+    rows = sweep(ranks, min_wall, min_runs, engine)
+    preds = [] if smoke else predict_rows(min_wall, min_runs, engine)
+    scen = scenario_rows((max(ranks),), 8 if smoke else 32,
+                         min_wall, 2 if smoke else min(min_runs, 3),
+                         engine)
     out: dict = {"ranks": list(ranks),
                  "prediction_ranks": [] if smoke else list(PREDICT_RANKS),
                  "min_runs": min_runs,
+                 "engine": engine,
                  "agreement_rtol": AGREEMENT_RTOL,
-                 "results": rows, "predictions": preds}
+                 "results": rows, "predictions": preds,
+                 "scenario_results": scen}
     betas = {f"{r['app']}/{r['mode']}": {"beta": r["beta"],
                                          "alpha_retired": r["alpha_retired"]}
              for r in rows if r["nranks"] == max(ranks)}
@@ -216,6 +320,9 @@ def main(out_path: str = "BENCH_apps.json", smoke: bool = False,
                                           "max": max(spd512)}
         out["compiled_max_ranks"] = max(
             (r["nranks"] for r in preds), default=None)
+        sb = [r["batch_speedup"] for r in scen]
+        out["scenario_batch_speedup_at_512"] = {"min": min(sb),
+                                                "max": max(sb)}
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"\nwrote {out_path}")
@@ -238,6 +345,9 @@ def main(out_path: str = "BENCH_apps.json", smoke: bool = False,
             "2-rank predictions must stay in the DESIGN.md §7 band"
         assert out["compiled_speedup_at_512"]["min"] >= 8.0, \
             "compiled run_program must be >=8x the interpreter at 512"
+        assert out["scenario_batch_speedup_at_512"]["min"] >= 5.0, \
+            "batched scenario sweep must be >=5x the per-binding lane " \
+            "at 512 ranks"
     # the IR's whole point: the residual must not exceed the retired fudge
     for k, v in betas.items():
         assert v["beta"] <= v["alpha_retired"] + 1e-9, \
@@ -250,5 +360,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--min-runs", type=int, default=5,
                     help="floor on timed runs per throughput row")
+    ap.add_argument("--engine", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="scan backend of the compiled lanes")
     args = ap.parse_args()
-    main(smoke=args.smoke, min_runs=args.min_runs)
+    main(smoke=args.smoke, min_runs=args.min_runs, engine=args.engine)

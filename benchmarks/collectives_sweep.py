@@ -11,16 +11,29 @@ Two perf trajectories in one artifact (``BENCH_collectives.json``):
   powers of two, Figs. 14-19) — interpreted per size vs replayed as ONE
   compiled round program (``run_schedule_many``), with 1 rank/MPSoC
   placement (§6.1.4/6.1.5) on a torus scaled to fit
-  (``scaled_params``).  Includes 1024- and 4096-rank rows that were
-  impractical to sweep before the compiled backend (the interpreter is
-  sampled on a size subgrid there and compared by sends/sec rate).
+  (``scaled_params``).  Includes 512- (paper prototype scale), 1024- and
+  4096-rank rows that were impractical to sweep before the compiled
+  backend (the interpreter is sampled on a size subgrid there and
+  compared by sends/sec rate).
+  Each sweep row also times the **per-binding** compiled lane (the same
+  grid as one single-size replay per call, B=1) against the batched
+  replay and records ``batch_speedup`` — what the batch-binding axis
+  buys over looping the compiled executor (DESIGN.md §6).
+
+* **engine rows**: when jax is importable, the batched grid is replayed
+  on both scan engines (``numpy`` and ``jax``, DESIGN.md §2.5) at the
+  largest swept rank count, cross-checked to <=1e-9, and both rates are
+  recorded.
 
 Run: PYTHONPATH=src python benchmarks/collectives_sweep.py [--smoke]
+         [--engine numpy|jax]
 
 ``--smoke`` (used by the CI benchmark step) drops the 256+-rank sweeps and
 shortens the timed windows so perf artifacts stay fresh without slowing
 CI; it still exercises the compiled backend end to end and fails loudly
-if compiled and interpreted latencies ever disagree.
+if compiled and interpreted latencies ever disagree.  ``--engine``
+selects the scan backend of every batched replay (default numpy); the
+artifact records it per row.
 """
 
 from __future__ import annotations
@@ -51,7 +64,7 @@ SWEEP_SIZES = tuple(1 << i for i in range(23))
 #: at 4096 ranks takes minutes; sends/sec is compared as a rate)
 BIG_RANK_INTERP_SIZES = (1, 32, 1024, 32768, 1 << 20, 4 << 20)
 SWEEP_RANKS = (16, 64, 256)
-BIG_SWEEP_RANKS = (1024, 4096)
+BIG_SWEEP_RANKS = (512, 1024, 4096)
 SWEEP_SCHEDULES = (
     ("bcast", BinomialBroadcast, lambda n: n - 1),
     ("allreduce", RecursiveDoublingAllreduce,
@@ -118,20 +131,36 @@ def _interp_grid(mpi, sched, sizes, nranks, min_wall_s):
     return wall, runs
 
 
-def _compiled_grid(mpi, sched, sizes, nranks, min_wall_s):
+def _compiled_grid(mpi, sched, sizes, nranks, min_wall_s, engine=None):
     """sends/sec replaying one compiled program over the whole grid."""
-    mpi.run_schedule_many(sched, sizes, nranks)  # compile + bind once
+    mpi.run_schedule_many(sched, sizes, nranks, engine=engine)  # compile+bind
     runs, wall = 0, 0.0
     t0 = time.perf_counter()
     while wall < min_wall_s:
-        mpi.run_schedule_many(sched, sizes, nranks)
+        mpi.run_schedule_many(sched, sizes, nranks, engine=engine)
         runs += 1
         wall = time.perf_counter() - t0
     return wall, runs
 
 
-def compiled_sweep(ranks, big_ranks, min_wall_s) -> list[dict]:
-    """PR-3 rows: compiled vs interpreted over the message-size sweep."""
+def _per_binding_grid(mpi, sched, sizes, nranks, min_wall_s, engine=None):
+    """sends/sec looping the compiled executor one size at a time (B=1
+    columns) — the pre-batch-axis way to cover a grid."""
+    for s in sizes:
+        mpi.run_schedule_many(sched, (s,), nranks, engine=engine)  # bind
+    runs, wall = 0, 0.0
+    t0 = time.perf_counter()
+    while wall < min_wall_s:
+        for s in sizes:
+            mpi.run_schedule_many(sched, (s,), nranks, engine=engine)
+        runs += 1
+        wall = time.perf_counter() - t0
+    return wall, runs
+
+
+def compiled_sweep(ranks, big_ranks, min_wall_s, engine=None) -> list[dict]:
+    """PR-3 rows: compiled vs interpreted over the message-size sweep,
+    plus the batched-vs-per-binding lane (PR 6)."""
     rows = []
     for coll, sched_cls, sends_per_run in SWEEP_SCHEDULES:
         for n in tuple(ranks) + tuple(big_ranks):
@@ -146,9 +175,12 @@ def compiled_sweep(ranks, big_ranks, min_wall_s) -> list[dict]:
             iw, ir = _interp_grid(mpi, sched, interp_sizes, n,
                                   min_wall_s)
             cw, cr = _compiled_grid(mpi, sched, SWEEP_SIZES, n,
-                                    min_wall_s)
+                                    min_wall_s, engine)
+            pw, pr = _per_binding_grid(mpi, sched, SWEEP_SIZES, n,
+                                       min_wall_s, engine)
             # equal-latency guard: the two backends must agree (~1e-9)
-            batch = mpi.run_schedule_many(sched, SWEEP_SIZES, n)
+            batch = mpi.run_schedule_many(sched, SWEEP_SIZES, n,
+                                          engine=engine)
             probe = [SWEEP_SIZES[0], SWEEP_SIZES[len(SWEEP_SIZES) // 2],
                      SWEEP_SIZES[-1]]
             for s in probe:
@@ -160,36 +192,93 @@ def compiled_sweep(ranks, big_ranks, min_wall_s) -> list[dict]:
                         f"interp {a.latency_us} vs compiled {b}")
             i_rate = sends_per_run(n) * len(interp_sizes) * ir / iw
             c_rate = sends_per_run(n) * len(SWEEP_SIZES) * cr / cw
+            p_rate = sends_per_run(n) * len(SWEEP_SIZES) * pr / pw
             row = {"collective": coll, "nranks": n,
                    "grid_sizes": len(SWEEP_SIZES),
+                   "engine": engine or "numpy",
                    "interp": {"wall_s": round(iw, 4), "runs": ir,
                               "grid_sizes": len(interp_sizes),
                               "sends_per_sec": round(i_rate, 1)},
                    "compiled": {"wall_s": round(cw, 4), "runs": cr,
                                 "sends_per_sec": round(c_rate, 1)},
-                   "speedup_compiled": round(c_rate / i_rate, 2)}
+                   "per_binding": {"wall_s": round(pw, 4), "runs": pr,
+                                   "sends_per_sec": round(p_rate, 1)},
+                   "speedup_compiled": round(c_rate / i_rate, 2),
+                   "batch_speedup": round(c_rate / p_rate, 2)}
             rows.append(row)
             print(f"{coll:9s} sweep N={n:4d}  "
                   f"interp={i_rate:>11.0f} sends/s  "
                   f"compiled={c_rate:>12.0f}  "
-                  f"speedup={row['speedup_compiled']:.2f}x")
+                  f"speedup={row['speedup_compiled']:.2f}x  "
+                  f"batch={row['batch_speedup']:.2f}x")
     return rows
 
 
-def main(out_path: str = "BENCH_collectives.json", smoke: bool = False) -> None:
+def engine_rows(nranks: int, min_wall_s: float) -> list[dict]:
+    """numpy-vs-jax scan-engine comparison on the batched grid (skipped
+    when jax is not importable; DESIGN.md §2.5)."""
+    from repro.core.exanet.scan_engine import available_engines
+    if "jax" not in available_engines():
+        print("engine rows: jax not importable, skipping")
+        return []
+    p = scaled_params((nranks - 1) * DEFAULT.cores_per_mpsoc + 1)
+    mpi = ExanetMPI(p, ranks_per_mpsoc=1)
+    rows = []
+    for coll, sched_cls, sends_per_run in SWEEP_SCHEDULES:
+        sched = sched_cls()
+        lat = {}
+        row = {"collective": coll, "nranks": nranks,
+               "grid_sizes": len(SWEEP_SIZES)}
+        for eng in ("numpy", "jax"):
+            w, r = _compiled_grid(mpi, sched, SWEEP_SIZES, nranks,
+                                  min_wall_s, eng)
+            rate = sends_per_run(nranks) * len(SWEEP_SIZES) * r / w
+            row[eng] = {"wall_s": round(w, 4), "runs": r,
+                        "sends_per_sec": round(rate, 1)}
+            lat[eng] = mpi.run_schedule_many(sched, SWEEP_SIZES, nranks,
+                                             engine=eng).latency_us
+        rel = float(max(abs(lat["jax"] - lat["numpy"])
+                        / abs(lat["numpy"])))
+        if rel > 1e-9:
+            raise AssertionError(f"engine disagreement {coll} N={nranks}: "
+                                 f"{rel:.2e} rel")
+        row["agreement_rel"] = rel
+        row["jax_vs_numpy"] = round(row["jax"]["sends_per_sec"]
+                                    / row["numpy"]["sends_per_sec"], 3)
+        rows.append(row)
+        print(f"{coll:9s} engine N={nranks:4d}  "
+              f"numpy={row['numpy']['sends_per_sec']:>12.0f} sends/s  "
+              f"jax={row['jax']['sends_per_sec']:>12.0f}  "
+              f"jax/numpy={row['jax_vs_numpy']:.3f}x  agree {rel:.1e}")
+    return rows
+
+
+def main(out_path: str = "BENCH_collectives.json", smoke: bool = False,
+         engine: str = "numpy") -> None:
     ranks = RANKS[:-1] if smoke else RANKS
     out = sweep(ranks, min_wall_s=0.05 if smoke else 0.2)
     sweep_ranks = SWEEP_RANKS[:-1] if smoke else SWEEP_RANKS
     big_ranks = () if smoke else BIG_SWEEP_RANKS
     rows = compiled_sweep(sweep_ranks, big_ranks,
-                          min_wall_s=0.05 if smoke else 0.5)
+                          min_wall_s=0.05 if smoke else 0.5,
+                          engine=engine)
+    out["engine"] = engine
     out["sweep_sizes"] = [int(s) for s in SWEEP_SIZES]
     out["sweep_results"] = rows
+    out["engine_results"] = engine_rows(
+        max(tuple(sweep_ranks) + tuple(big_ranks)),
+        min_wall_s=0.05 if smoke else 0.5)
     if not smoke:
         at_256 = [r["speedup_compiled"] for r in rows if r["nranks"] == 256]
         out["compiled_speedup_at_256_ranks"] = {"min": min(at_256),
                                                 "max": max(at_256)}
         out["compiled_max_ranks"] = max(r["nranks"] for r in rows)
+        big = [r["batch_speedup"] for r in rows if r["nranks"] >= 512]
+        out["batch_speedup_at_big_ranks"] = {"min": min(big),
+                                             "max": max(big)}
+        assert out["batch_speedup_at_big_ranks"]["max"] >= 5.0, \
+            "batched replay must be >=5x the per-binding compiled loop " \
+            "on at least one >=512-rank size grid"
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     s = out["speedup_at_top_ranks"]
@@ -197,10 +286,20 @@ def main(out_path: str = "BENCH_collectives.json", smoke: bool = False) -> None:
           f"ranks: {s['min']:.2f}x-{s['max']:.2f}x")
     if not smoke:
         c = out["compiled_speedup_at_256_ranks"]
+        b = out["batch_speedup_at_big_ranks"]
         print(f"compiled-vs-interp sweep speedup at 256 ranks: "
               f"{c['min']:.2f}x-{c['max']:.2f}x "
-              f"(max swept ranks: {out['compiled_max_ranks']})")
+              f"(max swept ranks: {out['compiled_max_ranks']}); "
+              f"batched-vs-per-binding at >=512 ranks: "
+              f"{b['min']:.2f}x-{b['max']:.2f}x")
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv[1:])
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="scan backend of the batched replays")
+    args = ap.parse_args()
+    main(smoke=args.smoke, engine=args.engine)

@@ -1,162 +1,226 @@
-"""§Perf hillclimb driver: lower a cell with named variants (extra_flags),
-record the roofline deltas vs the baseline.
+"""Population hillclimb over a parametric allreduce-schedule family,
+fitness-evaluated on the batched compiled substrate.
 
-Usage:
-  PYTHONPATH=src python -m benchmarks.hillclimb --cell <name> --out results/perf
+This is the search seam ROADMAP item 2 (schedule synthesis) drives: the
+simulator as a fitness function.  The inner loop evaluates a *whole
+candidate population per call* — one genome-indexed schedule binds every
+candidate as a batch column of a single compiled replay
+(``ExanetMachine.cost_many``), so a generation costs one vectorized run
+instead of P interpreted simulations.
 
-Cells and their iteration ladders are defined in VARIANTS — each entry is
-(variant_name, hypothesis, extra_flags). Results append to
-results/perf/<cell>.json for the EXPERIMENTS.md §Perf log.
+The searched family is a generalized xor-butterfly allreduce: at
+reduce-scatter step ``i`` (distance ``d = n/2^{i+1}``) each pair splits
+its working set by a genome fraction ``sigma_i`` — the lower rank keeps
+``(1-sigma_i)`` and receives its partner's copy of that part, the upper
+rank keeps ``sigma_i``.  The all-gather phase mirrors the splits back.
+``sigma_i = 1/2`` everywhere *is* Rabenseifner's recursive halving; the
+hillclimb re-derives that balance point at bandwidth-bound sizes without
+being told, and is free to skew splits at latency-bound sizes where
+rounding and the 32 B eager boundary distort the trade.
+
+Every generation's best candidate is cross-checked against the
+interpreter to <=1e-9 relative — the agreement harness is the
+equivalence check that keeps synthesized schedules honest (the Exo
+pattern, see ROADMAP item 2).
+
+Run:
+  PYTHONPATH=src python benchmarks/hillclimb.py [--smoke] [--engine jax]
+      [--nranks 64] [--pop 48] [--gens 10]
+
+Writes ``BENCH_hillclimb.json`` (schema: DESIGN.md §6).
 """
 
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import time
+
+import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-# (arch, shape, multi_pod) per hillclimb cell
-CELLS = {
-    "dsv3-train": ("deepseek-v3-671b", "train_4k", True),
-    "starcoder2-prefill": ("starcoder2-7b", "prefill_32k", False),
-    "mistral-train": ("mistral-large-123b", "train_4k", False),
-}
+from repro.core.exanet.schedules import (RabenseifnerAllreduce,  # noqa: E402
+                                         RecursiveDoublingAllreduce,
+                                         RingAllreduce, Round, Schedule)
+from repro.core.machine import ExanetMachine  # noqa: E402
 
-VARIANTS = {
-    "starcoder2-prefill": [
-        ("baseline", "36 heads don't divide TP=16 -> attention fully "
-         "replicated per chip; expect attention to dominate flops+bytes", {}),
-        ("pad48", "pad q heads 36->48 (exact math, zero-grad padding): "
-         "attention shards 16-way -> ~12x less attn flops/bytes per chip",
-         {"cfg_overrides": {"pad_heads_to": 48}}),
-        ("pad48_chunk2k", "double flash chunks 1024->2048: halves the "
-         "number of block boundaries -> ~2x less score-tensor HBM traffic",
-         {"cfg_overrides": {"pad_heads_to": 48, "q_chunk": 2048,
-                            "kv_chunk": 2048}}),
-        ("pad48_chunk4k", "4096 chunks: further boundary reduction, but "
-         "block buffers (B*H_loc*qc*kc) start to stress VMEM-scale reuse",
-         {"cfg_overrides": {"pad_heads_to": 48, "q_chunk": 4096,
-                            "kv_chunk": 4096}}),
-    ],
-    "mistral-train": [
-        ("baseline", "88-layer FSDP dense model: expect weight all-gathers "
-         "(x3 passes x microbatches) to dominate collectives", {}),
-        ("mb1", "microbatches 4->1: weight gathers shrink 4x at the cost "
-         "of 4x activation memory (43GB — over budget, for measurement)",
-         {"train_policy": {"microbatches": 1}}),
-        ("quantized-opt", "int8 m/v states: -5.7GB optimizer memory, "
-         "bf16 accum -1.9GB; expect no change in roofline terms",
-         {"train_policy": {"opt_cfg": "QUANT"}}),
-        ("chunk2k", "flash chunks 2048: less attention HBM traffic",
-         {"cfg_overrides": {"q_chunk": 2048, "kv_chunk": 2048}}),
-        ("gather-weights", "force ZeRO-3 weight all-gathers instead of "
-         "GSPMD's activation psums over 'data' (see dsv3 diagnosis)",
-         {"gather_weights": True}),
-    ],
-    "dsv3-train": [
-        ("baseline", "MoE + MLA + MTP on 2 pods: expect collectives "
-         "(expert a2a + FSDP gathers + cross-pod grad AR) to dominate", {}),
-        ("cap1.0", "capacity factor 1.25->1.0: 20% less a2a payload and "
-         "20% less expert compute (drops ~2% more tokens)",
-         {"cfg_overrides": {"moe": "CAP1"}}),
-        ("gather-weights", "measured 1.9TB/dev of activation all-reduce: "
-         "GSPMD psums activations over 'data' instead of gathering the "
-         "0.36GB/layer dense FSDP shards -> force ZeRO-3 weight gathers",
-         {"gather_weights": True}),
-        ("a2a-int8", "int8 a2a dispatch via custom-VJP quantized "
-         "all_to_all (DeepSeek-V3's own fp8-dispatch trick; the naive "
-         "round() variant silently ZEROED the dispatch gradient): ~2x "
-         "less EP wire bytes both directions, off the 3.3TB/dev a2a",
-         {"cfg_overrides": {"moe": "QUANT"}}),
-        ("a2a-int8+cap1.0", "combine the two confirmed wins",
-         {"cfg_overrides": {"moe": "QUANT_CAP1"}}),
-    ],
-}
+#: latency-bound, crossover, and bandwidth-bound points of the OSU grid
+NBYTES = (64, 4096, 262144)
+AGREEMENT_RTOL = 1e-9
 
 
-def _resolve(flags, arch):
-    import dataclasses
-    from repro.configs import get
-    from repro.train.optimizer import AdamWConfig
-    out = json.loads(json.dumps({k: v for k, v in flags.items()
-                                 if k != "train_policy"}))
-    out = dict(flags)
-    co = dict(out.get("cfg_overrides", {}))
-    if co.get("moe") == "CAP1":
-        co["moe"] = dataclasses.replace(get(arch).moe, capacity_factor=1.0)
-    if co.get("moe") == "QUANT":
-        co["moe"] = dataclasses.replace(get(arch).moe, a2a_quant=True)
-    if co.get("moe") == "QUANT_CAP1":
-        co["moe"] = dataclasses.replace(get(arch).moe, a2a_quant=True,
-                                        capacity_factor=1.0)
-    if co:
-        out["cfg_overrides"] = co
-    tp = dict(out.get("train_policy", {}))
-    if tp.get("opt_cfg") == "QUANT":
-        tp["opt_cfg"] = AdamWConfig(quantize_states=True)
-    if tp:
-        out["train_policy"] = tp
-    return out
+class ButterflyPopulation(Schedule):
+    """Genome-indexed butterfly-allreduce family.
+
+    The ``nbytes`` argument of the :class:`CollectiveSchedule` protocol
+    is reinterpreted as a *candidate index* into ``population`` — the
+    compiled executor then binds the whole population as columns of one
+    replay (``cost_many(sched, nranks, range(P))``), because the round
+    structure (xor pairs, exchange flags) is genome-invariant while the
+    per-send byte counts vary per column.
+
+    ``population`` is a (P, log2(nranks)) array of split fractions in
+    (0, 1); the payload is the constructor's ``nbytes``.
+    """
+
+    name = "allreduce_butterfly_population"
+
+    def __init__(self, nbytes: int, population: np.ndarray):
+        self.nbytes = int(nbytes)
+        self.population = np.asarray(population, dtype=np.float64)
+
+    # full-vector endpoint copies, like every software allreduce here
+    def pre_copy_bytes(self, idx: int) -> int:
+        return self.nbytes
+
+    def post_copy_bytes(self, idx: int) -> int:
+        return self.nbytes
+
+    def rounds(self, nranks: int, idx: int):
+        if nranks < 4 or nranks & (nranks - 1):
+            raise ValueError(f"butterfly family needs power-of-two "
+                             f"ranks >= 4, got {nranks}")
+        # modulo: structure probes (round_parallelism's _STRUCT_SIZE)
+        # may pass any index, and the structure is genome-invariant
+        g = self.population[int(idx) % len(self.population)]
+        steps = nranks.bit_length() - 1
+        if g.shape[0] != steps:
+            raise ValueError(f"genome length {g.shape[0]} != log2(nranks)"
+                             f"={steps}")
+        # per-rank working-set bytes; r and r^d share an identical split
+        # history (they differ only in bit log2(d)), so pair sets agree
+        w = np.full(nranks, float(self.nbytes))
+        step, d = 0, nranks // 2
+        for sigma in g:
+            sends, kept = [], np.empty(nranks)
+            for r in range(nranks):
+                p = r ^ d
+                # lower rank keeps (1-sigma): it sends its copy of the
+                # partner's sigma-share and receives the (1-sigma)-share
+                mine = (1.0 - sigma) if r < p else sigma
+                sends.append((r, p, max(1, int(round(w[r] * (1.0 - mine))))))
+                kept[r] = w[r] * mine
+            # the reduction each rank performs covers its kept share;
+            # Round carries one reduce_bytes, so charge the larger share
+            red = max(1, int(round(w.max() * max(sigma, 1.0 - sigma))))
+            yield Round(step, tuple(sends), exchange=True,
+                        reduce_bytes=red, label="reduce_scatter")
+            w = kept
+            step, d = step + 1, d // 2
+        d = 1
+        while d < nranks:
+            # all-gather mirror: everyone ships its whole owned segment
+            sends = tuple((r, r ^ d, max(1, int(round(w[r]))))
+                          for r in range(nranks))
+            yield Round(step, sends, exchange=True, label="all_gather")
+            w = w + w[np.arange(nranks) ^ d]
+            step, d = step + 1, d * 2
 
 
-def run(cell: str, out_dir: str, only: str | None = None):
-    from repro.launch.dryrun import analyze, lower_cell
-    arch, shape, multi = CELLS[cell]
-    os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, cell + ".json")
-    results = json.load(open(path)) if os.path.exists(path) else []
-    done = {r["variant"] for r in results}
-    for name, hypothesis, flags in VARIANTS[cell]:
-        if name in done or (only and name != only):
-            continue
-        print(f"[{cell}] variant={name}: {hypothesis}", flush=True)
-        try:
-            lowered, meta = lower_cell(arch, shape, multi,
-                                       extra_flags=_resolve(flags, arch))
-            compiled_txt_holder = {}
-            meta = analyze(lowered, meta,
-                           hlo_sink=compiled_txt_holder)
-            rec = {"variant": name, "hypothesis": hypothesis, **meta}
-            # projected effect of the fused Pallas attention kernels:
-            # score/probability tensors stay in VMEM (see hlo_cost)
-            if "hlo" in compiled_txt_holder:
-                from repro.roofline.hlo_cost import flash_block_report
-                from repro.roofline.analysis import roofline_terms
-                fr = flash_block_report(compiled_txt_holder["hlo"])
-                new_bytes = (meta["hlo_cost"]["bytes"]
-                             - fr["savings_bytes"])
-                proj = roofline_terms(meta["hlo_cost"]["flops"], new_bytes,
-                                      meta["collectives"]["total"])
-                rec["pallas_attention_projection"] = {
-                    "attn_block_gb": fr["block_bytes"] / 1e9,
-                    "fused_gb": fr["fused_bytes"] / 1e9,
-                    "memory_s": proj["memory_s"],
-                    "roofline_fraction": proj["roofline_fraction"],
-                    "bottleneck": proj["bottleneck"],
-                }
-        except Exception as e:  # noqa: BLE001
-            rec = {"variant": name, "hypothesis": hypothesis,
-                   "error": f"{type(e).__name__}: {e}"}
-        results.append(rec)
-        with open(path, "w") as f:
-            json.dump(results, f, indent=1, default=str)
-        if "roofline" in rec:
-            r = rec["roofline"]
-            print(f"  -> comp={r['compute_s']:.3f} mem={r['memory_s']:.3f} "
-                  f"coll={r['collective_s']:.3f} rf={r['roofline_fraction']:.3f} "
-                  f"peak={rec['memory']['peak_gb']:.1f}GB", flush=True)
+def evaluate(machine: ExanetMachine, nbytes: int, nranks: int,
+             population: np.ndarray, engine: str) -> np.ndarray:
+    """Fitness (simulated seconds) of every candidate — ONE batched
+    cost_many call, candidates as columns."""
+    fam = ButterflyPopulation(nbytes, population)
+    return np.asarray(machine.cost_many(fam, nranks,
+                                        range(len(population)),
+                                        engine=engine))
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", choices=list(CELLS), required=True)
-    ap.add_argument("--variant", default=None)
-    ap.add_argument("--out", default="results/perf")
+def hillclimb(machine: ExanetMachine, nbytes: int, nranks: int, *,
+              pop: int, gens: int, engine: str,
+              rng: np.random.Generator) -> dict:
+    steps = nranks.bit_length() - 1
+    # seed half the population at the balanced (Rabenseifner) point,
+    # half uniform — the climb should rediscover balance on its own
+    population = np.clip(np.concatenate([
+        0.5 + 0.08 * rng.standard_normal((pop // 2, steps)),
+        rng.uniform(0.05, 0.95, (pop - pop // 2, steps))]), 0.02, 0.98)
+    best_g, best_s = None, np.inf
+    evals = 0
+    t0 = time.perf_counter()
+    for gen in range(gens):
+        cost = evaluate(machine, nbytes, nranks, population, engine)
+        evals += len(population)
+        order = np.argsort(cost)
+        if cost[order[0]] < best_s:
+            best_s, best_g = float(cost[order[0]]), \
+                population[order[0]].copy()
+        # elite quarter survives; the rest are mutated elite clones
+        elite = population[order[:max(1, pop // 4)]]
+        scale = 0.15 * (1.0 - gen / gens) + 0.02
+        children = elite[rng.integers(0, len(elite), pop - len(elite))] \
+            + scale * rng.standard_normal((pop - len(elite), steps))
+        population = np.clip(np.concatenate([elite, children]),
+                             0.02, 0.98)
+    wall = time.perf_counter() - t0
+
+    # equivalence check: the winning genome's batched latency must match
+    # the interpreter replaying the same schedule (<=1e-9 relative)
+    fam = ButterflyPopulation(nbytes, best_g[None, :])
+    mpi = machine._mpi_for(nranks)
+    interp_s = mpi.run_schedule(fam, 0, nranks,
+                                backend="interp").latency_us * 1e-6
+    rel = abs(best_s - interp_s) / max(abs(interp_s), 1e-30)
+    assert rel <= AGREEMENT_RTOL, \
+        f"winner disagrees with interpreter: {rel:.2e} rel"
+
+    menu = {}
+    for cls in (RecursiveDoublingAllreduce, RabenseifnerAllreduce,
+                RingAllreduce):
+        sched = cls()
+        menu[sched.name] = machine.cost_many(sched, nranks, [nbytes],
+                                             engine=engine)[0]
+    best_menu = min(menu.values())
+    return {
+        "nbytes": nbytes, "nranks": nranks, "engine": engine,
+        "population": pop, "generations": gens, "evals": evals,
+        "wall_s": round(wall, 4),
+        "candidates_per_sec": round(evals / wall, 1),
+        "batched_calls": gens,
+        "best_genome": [round(float(x), 4) for x in best_g],
+        "best_s": best_s, "interp_agreement_rel": rel,
+        "menu_s": {k: round(v, 9) for k, v in menu.items()},
+        "vs_best_menu": round(best_s / best_menu, 4),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny population/generations for CI")
+    ap.add_argument("--engine", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="scan backend of the batched replays")
+    ap.add_argument("--nranks", type=int, default=64)
+    ap.add_argument("--pop", type=int, default=48)
+    ap.add_argument("--gens", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_hillclimb.json")
     args = ap.parse_args()
-    run(args.cell, args.out, args.variant)
+    pop, gens = (12, 3) if args.smoke else (args.pop, args.gens)
+    machine = ExanetMachine()
+    rng = np.random.default_rng(args.seed)
+    rows = []
+    for nbytes in NBYTES:
+        row = hillclimb(machine, nbytes, args.nranks, pop=pop, gens=gens,
+                        engine=args.engine, rng=rng)
+        rows.append(row)
+        print(f"nbytes={nbytes:7d} N={args.nranks}  best={row['best_s']:.3e}s"
+              f"  vs-menu={row['vs_best_menu']:.3f}x  "
+              f"({row['candidates_per_sec']:.0f} cand/s, "
+              f"{row['batched_calls']} batched calls, agree "
+              f"{row['interp_agreement_rel']:.1e})")
+    out = {"smoke": args.smoke, "engine": args.engine,
+           "nranks": args.nranks, "results": rows}
+    if not args.smoke:
+        out["max_vs_best_menu"] = max(r["vs_best_menu"] for r in rows)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -49,9 +49,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.exanet.sim import (ResourceState, scan_take_masks,
-                                   segmented_maxplus_scan,
-                                   segmented_running_max)
+from repro.core.exanet.scan_engine import NUMPY, resolve_engine
+from repro.core.exanet.sim import ResourceState, scan_take_masks
 
 NEG_INF = float("-inf")
 
@@ -306,6 +305,7 @@ class VecTransport:
 
     def _init_transport(self, p):
         self._p = p
+        self._eng = NUMPY     # scan engine; rebound per run (engine=)
         self._eager_max = p.mpi_eager_max_bytes
         self._pktz_occ = p.pktz_occupancy_us
         self._pktz_ret = p.pktz_occupancy_us + p.a53_call_overhead_us
@@ -346,7 +346,7 @@ class VecTransport:
             F0 = state.free[rows]
         if dur_const and act is None:
             # group-constant durations: one plain running-max scan
-            v = segmented_running_max(ts - st.kpos * ds, st.takes)
+            v = self._eng.running_max(ts - st.kpos * ds, st.takes)
             f_after = np.maximum(v, F0) + st.kpos1 * ds
         else:
             if act is None:
@@ -357,9 +357,7 @@ class VecTransport:
                 asub = act[st.sperm] if gather else act
                 D = np.where(asub, ds, 0.0)
                 T = np.where(asub, ts + ds, NEG_INF)
-            Dacc, Tacc = segmented_maxplus_scan(D, T, st.first,
-                                                st.max_group,
-                                                takes=st.takes, copy=False)
+            Dacc, Tacc = self._eng.maxplus_scan(D, T, st.takes)
             f_after = np.maximum(F0 + Dacc, Tacc)
         if cols is not None:
             state.free[(rows[st.last][:, None], cols[None, :])] = \
@@ -728,7 +726,8 @@ class RoundProgram(VecTransport):
                 np.where(rdvl, sfree_r, sfree_e))
 
     def run(self, sched, sizes, *, state: ResourceState | None = None,
-            t0: np.ndarray | None = None) -> BatchScheduleResult:
+            t0: np.ndarray | None = None,
+            engine=None) -> BatchScheduleResult:
         """Execute the program over a message-size grid in one batch.
 
         ``state``/``t0`` serve *embedded* execution inside a compiled
@@ -739,7 +738,14 @@ class RoundProgram(VecTransport):
         starts over (its rows must cover :attr:`n_rows`).  The level
         decomposition is start-state independent, so one lowered program
         serves both the cold standalone replay and every spliced entry.
+        ``t0`` is also exact for standalone runs (fresh all-zero state):
+        it batches per-rank arrival offsets — one scenario per column of
+        a repeated-size grid.
+
+        ``engine`` selects the scan backend (``"numpy"`` default,
+        ``"jax"``, or an engine object; DESIGN.md §2.5).
         """
+        self._eng = resolve_engine(engine)
         bound = self.bind(sched, sizes)
         B = len(bound.sizes)
         p = self._p
@@ -796,7 +802,7 @@ class RoundProgram(VecTransport):
         # activity column-uniform — the running-max fast path applies
         v = np.where(r.ack_first_of_sender[:, None],
                      done[r.ack_src] - st.kpos * occ, NEG_INF)
-        v = segmented_running_max(v, st.takes)
+        v = self._eng.running_max(v, st.takes)
         f_after = np.maximum(v, F0) + st.kpos1 * occ
         if not rb.rdv_round.all():
             f_after = np.where(act, f_after, F0)

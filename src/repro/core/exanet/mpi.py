@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.exanet import sim
 from repro.core.exanet.exec_compiled import (BatchScheduleResult,
                                              ProgramStructureError,
@@ -176,16 +178,20 @@ class ExanetMPI:
         (:meth:`run_program`): ``t0`` gives per-rank entry clocks (the
         collective starts skewed, like real ranks arriving late) and
         ``reset=False`` keeps the engine's occupancy from in-flight
-        point-to-point traffic.  Embedded runs always interpret — the
-        compiled executor assumes zero occupancy and rank-uniform start.
+        point-to-point traffic.  ``reset=False`` runs always interpret —
+        the compiled executor assumes zero starting occupancy — but a
+        skewed fresh start (``t0`` with ``reset=True``) is exact on both
+        backends: compiled replay seeds its clocks from ``t0`` over an
+        all-zero :class:`ResourceState`, just like the interpreter after
+        ``net.reset()``.
         """
         if backend not in ("auto", "interp", "compiled"):
             raise ValueError(f"unknown backend {backend!r}; "
                              f"options: ['auto', 'compiled', 'interp']")
-        embedded = t0 is not None or not reset
+        embedded = not reset
         if embedded and backend == "compiled":
             raise ValueError("compiled backend cannot start from nonzero "
-                             "clocks/occupancy; use backend='interp'")
+                             "occupancy; use backend='interp'")
         auto = backend == "auto"
         if auto:
             backend = "compiled" if (
@@ -195,7 +201,10 @@ class ExanetMPI:
                 and self.compiled_profitable(sched, nranks)) else "interp"
         if backend == "compiled":
             try:
-                batch = self.run_schedule_many(sched, (size,), nranks)
+                t0c = None if t0 is None else \
+                    np.asarray(t0, dtype=np.float64)[:, None]
+                batch = self.run_schedule_many(sched, (size,), nranks,
+                                               t0=t0c)
             except ProgramStructureError:
                 if not auto:
                     raise
@@ -330,18 +339,26 @@ class ExanetMPI:
         return prog
 
     def run_schedule_many(self, sched: CollectiveSchedule, sizes,
-                          nranks: int) -> BatchScheduleResult:
+                          nranks: int, *, t0=None,
+                          engine=None) -> BatchScheduleResult:
         """Replay one compiled program over a whole message-size grid in a
         single batched run — the sweep workload (algorithm x size x scale,
         Figs. 14-19) that makes the compiled backend >=10x faster than
         interpreting each size.  Raises :class:`ProgramStructureError` if
         the schedule's round structure varies with size (no shipped
-        schedule does)."""
+        schedule does).
+
+        ``t0`` — optional (nranks, len(sizes)) per-rank entry clocks, one
+        column per binding: repeating one size across columns turns the
+        batch axis into a Monte-Carlo *arrival-offset* scenario axis (the
+        compiled twin of ``run_schedule(t0=...)``, still from fresh
+        occupancy).  ``engine`` selects the scan backend (``"numpy"``
+        default | ``"jax"``; DESIGN.md §2.5)."""
         if self.net.engine.tracing:
             raise ValueError("compiled backend records no per-send trace; "
                              "use backend='interp' (or trace=False)")
         prog = self.compiled_program(sched, nranks)
-        return prog.run(sched, sizes)
+        return prog.run(sched, sizes, t0=t0, engine=engine)
 
     # ------------------------------------------------------ program execution
     #: ``run_program(backend="auto")`` compiles at and above this rank
@@ -441,6 +458,21 @@ class ExanetMPI:
                 return False
         return True
 
+    def _program_auto_compiles(self, prog, plans: dict) -> bool:
+        """The consolidated ``backend="auto"`` gate of
+        :meth:`run_program` / :meth:`run_program_many`: compiled only
+        when (a) tracing is off (the compiled path records no trace),
+        (b) the program is at or above the rank floor
+        (:data:`PROGRAM_COMPILED_AUTO_MIN_RANKS` — BENCH_apps records
+        forced-compiled at 0.87x the interpreter for nranks=2 hpcg/weak,
+        so below the floor auto must interpret), and (c) every embedded
+        collective splice clears the sends-per-level parallelism floor
+        (:meth:`_program_splices_profitable`).  One method, so the two
+        entry points can never gate differently."""
+        return (not self.net.engine.tracing
+                and prog.nranks >= self.PROGRAM_COMPILED_AUTO_MIN_RANKS
+                and self._program_splices_profitable(prog, plans))
+
     def program_artifact(self, prog):
         """The cached compiled artifact of a Program *structure*
         (:meth:`repro.core.program.Program.structure_key`): payload data
@@ -461,7 +493,7 @@ class ExanetMPI:
         return art
 
     def run_program(self, prog, *, plans: dict | None = None,
-                    backend: str = "auto"):
+                    backend: str = "auto", engine=None):
         """Execute a :class:`repro.core.program.Program` on the event engine.
 
         Every rank's ops run concurrently: ``Compute`` occupies the rank's
@@ -493,6 +525,10 @@ class ExanetMPI:
         Returns the executor's :class:`~repro.core.program.ProgramResult`
         (per-rank completion clocks, total compute, send/collective
         counts).
+
+        ``engine`` selects the compiled path's scan backend (``"numpy"``
+        default | ``"jax"``; DESIGN.md §2.5) and is ignored by the
+        interpreter.
         """
         if backend not in ("auto", "interp", "compiled"):
             raise ValueError(f"unknown backend {backend!r}; "
@@ -522,17 +558,16 @@ class ExanetMPI:
                 if ent is None or ent[0]() is not prog:
                     plans = self._plan_program_sites(prog, plans)
                     if backend == "auto" and \
-                            not self._program_splices_profitable(prog,
-                                                                 plans):
+                            not self._program_auto_compiles(prog, plans):
                         raise ProgramStructureError(
-                            "serial-chain collective site")
+                            "auto gate: compiled would lose here")
                     art = self.program_artifact(prog)
                     ent = (weakref.ref(
                         prog, lambda _, k=id(prog): memo.pop(k, None)),
                         art, art.bind((prog,), (plans,)))
                     if default_plans:
                         memo[id(prog)] = ent
-                return ent[1].run(ent[2])[0]
+                return ent[1].run(ent[2], engine=engine)[0]
             except ProgramStructureError:
                 if backend == "compiled":
                     raise
@@ -546,13 +581,15 @@ class ExanetMPI:
             post_overhead_us=self.p.a53_call_overhead_us).run()
 
     def run_program_many(self, progs, *, plans=None,
-                         backend: str = "auto") -> list:
+                         backend: str = "auto", engine=None) -> list:
         """Execute many Programs, batching structurally-identical ones
         through one compiled artifact (columns of a single vectorized
-        replay) — the weak/strong sweep workload.  ``plans`` is an
-        optional per-program list.  Results keep input order; programs
-        below the auto threshold (or whose batch the compiler rejects)
-        fall back per program."""
+        replay, grouped by probe tape via
+        :meth:`CompiledProgram.bind_batch`) — the weak/strong sweep
+        workload.  ``plans`` is an optional per-program list.  Results
+        keep input order; programs below the auto threshold (or whose
+        batch the compiler rejects) fall back per program.  ``engine``
+        selects the compiled path's scan backend."""
         if backend not in ("auto", "interp", "compiled"):
             raise ValueError(f"unknown backend {backend!r}; "
                              f"options: ['auto', 'compiled', 'interp']")
@@ -578,11 +615,8 @@ class ExanetMPI:
         out: list = [None] * len(progs)
         groups: dict[tuple, list[int]] = {}
         for i, p in enumerate(progs):
-            if backend == "interp" or (backend == "auto" and (
-                    tracing
-                    or p.nranks < self.PROGRAM_COMPILED_AUTO_MIN_RANKS
-                    or not self._program_splices_profitable(
-                        p, resolved[i]))):
+            if backend == "interp" or (backend == "auto" and
+                    not self._program_auto_compiles(p, resolved[i])):
                 out[i] = self.run_program(p, plans=resolved[i],
                                           backend="interp")
             else:
@@ -590,17 +624,99 @@ class ExanetMPI:
         for idxs in groups.values():
             try:
                 art = self.program_artifact(progs[idxs[0]])
-                bound = art.bind([progs[i] for i in idxs],
-                                 [resolved[i] for i in idxs])
-                for i, r in zip(idxs, art.run(bound)):
-                    out[i] = r
+                for cols, bound in art.bind_batch(
+                        [progs[i] for i in idxs],
+                        [resolved[i] for i in idxs]):
+                    for j, r in zip(cols, art.run(bound, engine=engine)):
+                        out[idxs[int(j)]] = r
             except ProgramStructureError:
                 if backend == "compiled":
                     raise
                 for i in idxs:  # retry singly (compiled, then interp)
                     out[i] = self.run_program(progs[i], plans=resolved[i],
-                                              backend="auto")
+                                              backend="auto",
+                                              engine=engine)
         return out
+
+    def run_program_scenarios(self, prog, *, compute_scale=None,
+                              byte_scale=None, plans: dict | None = None,
+                              engine=None, check: int = 0,
+                              rtol: float = 1e-9) -> list:
+        """Monte-Carlo scenario sweep of one Program as a single batched
+        replay: N payload perturbations of ``prog`` bind as columns of
+        its compiled artifact (:meth:`CompiledProgram.bind_arrays` — no
+        N Program objects, no N probes) and execute in one pass.
+
+        ``compute_scale`` — (N,) per-scenario or (nranks, N) per-rank
+        multiplicative compute skew; ``byte_scale`` — (N,) per-scenario
+        multiplier on every point-to-point payload (rounded to whole
+        bytes; collective sites keep their base size, so the planner's
+        schedule choice — and with it the probe tape — is
+        scenario-invariant).  ``check`` > 0 cross-checks that many
+        evenly-sampled columns against the interpreter
+        (:func:`rebind_program` hands it the perturbed column) and raises
+        if any latency disagrees beyond ``rtol`` relative — the guard for
+        builders whose scheduling order is *not* payload-invariant.
+
+        Returns N :class:`~repro.core.program.ProgramResult`\\ s.
+        """
+        from repro.core.exanet.program_compiled import (extract_data,
+                                                        rebind_program)
+        base = extract_data(prog)
+        N = None
+        for nm, a in (("compute_scale", compute_scale),
+                      ("byte_scale", byte_scale)):
+            if a is not None:
+                n = np.asarray(a).shape[-1]
+                if N is None:
+                    N = n
+                elif n != N:
+                    raise ValueError(f"{nm} disagrees on N ({n} vs {N})")
+        if N is None:
+            raise ValueError("give compute_scale and/or byte_scale")
+        comp_cols = post_cols = None
+        base_comp = np.array(base[0], dtype=np.float64)
+        base_post = np.array(base[1], dtype=np.float64)
+        if compute_scale is not None:
+            cs = np.asarray(compute_scale, dtype=np.float64)
+            if cs.ndim == 1:
+                comp_cols = base_comp[:, None] * cs[None, :]
+            else:
+                if cs.shape[0] != prog.nranks:
+                    raise ValueError(
+                        f"compute_scale must be (N,) or (nranks, N); got "
+                        f"{cs.shape} for nranks={prog.nranks}")
+                art0 = self.program_artifact(prog)
+                comp_cols = base_comp[:, None] * \
+                    cs[art0._static.compute_rank]
+        if byte_scale is not None:
+            bs = np.asarray(byte_scale, dtype=np.float64)
+            post_cols = np.rint(base_post[:, None] * bs[None, :])
+        plans = self._plan_program_sites(prog, plans)
+        art = self.program_artifact(prog)
+        bound = art.bind_arrays(prog, compute_us=comp_cols,
+                                post_nbytes=post_cols, plans=plans)
+        results = art.run(bound, engine=engine)
+        if check > 0:
+            cols = np.unique(np.linspace(0, N - 1, min(int(check), N))
+                             .astype(np.int64))
+            for b in cols:
+                pb = rebind_program(
+                    prog,
+                    compute_us=None if comp_cols is None
+                    else comp_cols[:, b],
+                    post_nbytes=None if post_cols is None
+                    else post_cols[:, b])
+                ref = self.run_program(pb, plans=plans, backend="interp")
+                err = abs(results[b].latency_us - ref.latency_us) / \
+                    max(abs(ref.latency_us), 1e-30)
+                if err > rtol:
+                    raise ProgramStructureError(
+                        f"scenario column {int(b)} disagrees with the "
+                        f"interpreter ({err:.2e} rel > {rtol:.0e}) — the "
+                        f"scheduling order is payload-dependent; run "
+                        f"these scenarios via run_program_many instead")
+        return results
 
     def _step_class(self, src: int, dst: int) -> str:
         d = abs(dst - src) * (self.p.cores_per_mpsoc if self._rpm == 1 else 1)

@@ -67,6 +67,7 @@ import numpy as np
 from repro.core.exanet.exec_compiled import (ProgramStructureError,
                                              VecTransport, _Level,
                                              _make_stage, _send_res_tags)
+from repro.core.exanet.scan_engine import resolve_engine
 from repro.core.exanet.sim import ResourceState
 from repro.core.program import (Collective, Compute, Irecv, Isend, Program,
                                 ProgramError, ProgramExecutor, ProgramResult,
@@ -258,6 +259,39 @@ def extract_data(prog: Program) -> tuple:
     return tuple(comp), tuple(post_nb), sites
 
 
+def rebind_program(prog: Program, *, compute_us=None, post_nbytes=None,
+                   site_nbytes=None) -> Program:
+    """Rebuild ``prog`` with replaced payload data — the Program-object
+    inverse of one :meth:`CompiledProgram.bind_arrays` column, in the
+    same static-walk order :func:`extract_data` emits (computes and posts
+    rank-major in program order, collectives by site index).  Used by the
+    scenario cross-checks to hand a perturbed column to the
+    interpreter."""
+    ci = pi = 0
+    new_ranks = []
+    for ops in prog.rank_ops:
+        coll_i = 0
+        new_ops = []
+        for op in ops:
+            if isinstance(op, Compute):
+                if compute_us is not None:
+                    op = dataclasses.replace(op, us=float(compute_us[ci]))
+                ci += 1
+            elif isinstance(op, (Isend, Irecv)):
+                if post_nbytes is not None:
+                    op = dataclasses.replace(op,
+                                             nbytes=int(post_nbytes[pi]))
+                pi += 1
+            elif isinstance(op, Collective):
+                if site_nbytes is not None:
+                    op = dataclasses.replace(
+                        op, nbytes=int(site_nbytes[coll_i]))
+                coll_i += 1
+            new_ops.append(op)
+        new_ranks.append(tuple(new_ops))
+    return Program(tuple(new_ranks))
+
+
 # ---------------------------------------------------------------------------
 # probe recording
 # ---------------------------------------------------------------------------
@@ -376,6 +410,7 @@ class CompiledProgram(VecTransport):
         self._res_tags = None
         self._tape_cache: dict = {}
         self._bind_cache: dict = {}
+        self._probe_cache: dict = {}
 
     # ---------------------------------------------------------------- probe
     def _probe(self, prog: Program, plans: dict) -> tuple:
@@ -596,12 +631,38 @@ class CompiledProgram(VecTransport):
         return _CollSlot(site, name, sched, rp, entry, exit_)
 
     # ----------------------------------------------------------------- bind
+    def _tape_of(self, prog, plans, data, names) -> tuple:
+        """Cached probe: one interpreted run per distinct (payload data,
+        resolved schedule names) binding ever probed on this artifact."""
+        key = (data, names)
+        tape = self._probe_cache.get(key)
+        if tape is None:
+            tape = self._probe_cache[key] = self._probe(prog, plans or {})
+        return tape
+
     def bind(self, progs, plans_list=None) -> _BoundIR:
         """Bind one or more structurally-identical programs as batch
-        columns.  Raises :class:`ProgramStructureError` when a program's
-        structure does not match this artifact (the cache-poisoning guard:
-        differently-*structured* programs must never share a lowering) or
-        when the scheduler's firing order differs between columns."""
+        columns of a *single* replay.  Raises
+        :class:`ProgramStructureError` when the scheduler's firing order
+        differs between columns — :meth:`bind_batch` is the total version
+        that groups divergent columns instead of raising."""
+        groups = self.bind_batch(progs, plans_list)
+        if len(groups) > 1:
+            raise ProgramStructureError(
+                "scheduling order varies across the bound columns; bind "
+                "them separately")
+        return groups[0][1]
+
+    def bind_batch(self, progs, plans_list=None
+                   ) -> list[tuple[np.ndarray, _BoundIR]]:
+        """Bind structurally-identical programs as batch columns, grouped
+        by probe tape: returns ``[(column_indices, bound), ...]`` where
+        each bound replays its columns in one pass (one group — the
+        common case for wave-structured builders — means the whole batch
+        is a single array program).  Raises
+        :class:`ProgramStructureError` when a program's structure does
+        not match this artifact (the cache-poisoning guard:
+        differently-*structured* programs must never share a lowering)."""
         progs = list(progs)
         plans_list = list(plans_list or [None] * len(progs))
         datas = []
@@ -624,29 +685,124 @@ class CompiledProgram(VecTransport):
                 self._mpi._resolve_collective_schedule(
                     s.op, data[2][s.idx], s.algo, plans or {})
                 for s in self._static.sites))
-        key = (tuple(datas), tuple(names_cols))
-        bound = self._bind_cache.get(key)
-        if bound is not None:
-            return bound
-        tapes = [self._probe(prog, plans or {})
-                 for prog, plans in zip(progs, plans_list)]
-        if any(t != tapes[0] for t in tapes[1:]):
+        groups: dict[tuple, list[int]] = {}
+        for i, (prog, plans) in enumerate(zip(progs, plans_list)):
+            tape = self._tape_of(prog, plans, datas[i], names_cols[i])
+            groups.setdefault(tape, []).append(i)
+        out = []
+        for tape, cols in groups.items():
+            key = (tuple(datas[i] for i in cols),
+                   tuple(names_cols[i] for i in cols))
+            bound = self._bind_cache.get(key)
+            if bound is None:
+                lowered = self._lowered(tape)
+                bound = self._bind_data(lowered, [datas[i] for i in cols])
+                self._bind_cache[key] = bound
+            out.append((np.array(cols, dtype=np.int64), bound))
+        return out
+
+    def bind_arrays(self, prog: Program, *, compute_us=None,
+                    post_nbytes=None, site_nbytes=None,
+                    plans=None) -> _BoundIR:
+        """Scenario binding: N payload perturbations of one base program
+        as batch columns, *without* materializing N Program objects or
+        probing N times.
+
+        ``compute_us`` is (n_computes, N) per-slot compute microseconds
+        (slots in static-walk order: rank-major, program order — the
+        order :func:`extract_data` emits), ``post_nbytes``
+        (n_posts, N) per-post byte counts, ``site_nbytes`` (n_sites, N)
+        per-collective-site byte counts; ``None`` holds the base
+        program's value constant across columns.
+
+        All columns share the *base binding's* probe tape.  That is exact
+        whenever the scheduler's firing order is payload-invariant —
+        which holds for the repo's wave-structured builders (all ranks
+        post in lockstep; the heap's rank-id tie-break fixes the order)
+        but is not checked per column here: perturbations that change
+        which collective schedule a site resolves to are rejected, and
+        :meth:`ExanetMPI.run_program_scenarios` offers sampled
+        interpreter cross-checks for the rest.
+        """
+        if prog.structure_key() != self.key:
             raise ProgramStructureError(
-                "scheduling order varies across the bound columns; bind "
-                "them separately")
-        lowered = self._lowered(tapes[0])
-        bound = self._bind_data(lowered, datas)
-        self._bind_cache[key] = bound
-        return bound
+                "program structure does not match the compiled artifact "
+                "(FIFO matching / waits / collective sites differ) — "
+                "compile it instead of re-binding")
+        st = self._static
+        if plans is None:
+            plans = self._mpi._plan_program_sites(prog, None)
+        base = extract_data(prog)
+        N = None
+        for nm, a, k in (("compute_us", compute_us, st.n_computes),
+                         ("post_nbytes", post_nbytes, len(st.posts)),
+                         ("site_nbytes", site_nbytes, len(st.sites))):
+            if a is None:
+                continue
+            a = np.asarray(a)
+            if a.ndim != 2 or a.shape[0] != k:
+                raise ValueError(f"{nm} must have shape ({k}, N), "
+                                 f"got {a.shape}")
+            if N is None:
+                N = a.shape[1]
+            elif a.shape[1] != N:
+                raise ValueError("scenario arrays disagree on N")
+        if N is None:
+            N = 1
+        comp_cols = (np.asarray(compute_us, dtype=np.float64)
+                     if compute_us is not None else np.broadcast_to(
+                         np.array(base[0])[:, None], (st.n_computes, N)))
+        post_nb = (np.asarray(post_nbytes, dtype=np.float64)
+                   if post_nbytes is not None else np.broadcast_to(
+                       np.array(base[1], dtype=np.float64)[:, None],
+                       (len(st.posts), N)))
+        if site_nbytes is not None:
+            site_cols = np.asarray(site_nbytes, dtype=np.int64)
+        else:
+            site_cols = np.broadcast_to(
+                np.array(base[2], dtype=np.int64)[:, None],
+                (len(st.sites), N))
+        names0 = tuple(
+            None if self.nranks < 2 else
+            self._mpi._resolve_collective_schedule(
+                s.op, base[2][s.idx], s.algo, plans or {})
+            for s in st.sites)
+        for j, s in enumerate(st.sites):
+            if self.nranks < 2:
+                continue
+            for sz in np.unique(site_cols[j]):
+                name = self._mpi._resolve_collective_schedule(
+                    s.op, int(sz), s.algo, plans or {})
+                if name != names0[j]:
+                    raise ProgramStructureError(
+                        f"site #{j}: scenario size {int(sz)} resolves to "
+                        f"schedule {name!r} but the base binding uses "
+                        f"{names0[j]!r} — the tape differs; bind those "
+                        f"scenarios separately")
+        tape = self._tape_of(prog, plans, base, names0)
+        lowered = self._lowered(tape)
+        site_sizes = [tuple(int(x) for x in site_cols[j])
+                      for j in range(len(st.sites))]
+        return self._bind_cols(lowered, comp_cols, post_nb, site_sizes)
 
     def _bind_data(self, lowered: _LoweredTape, datas: list) -> _BoundIR:
         st = self._static
         B = len(datas)
-        po = self._p.a53_call_overhead_us
         comp_cols = np.array([d[0] for d in datas]).T.reshape(
             st.n_computes, B)
         post_nb = np.array([d[1] for d in datas], dtype=np.float64).T \
             .reshape(len(st.posts), B)
+        site_sizes = [tuple(int(d[2][s.idx]) for d in datas)
+                      for s in st.sites]
+        return self._bind_cols(lowered, comp_cols, post_nb, site_sizes)
+
+    def _bind_cols(self, lowered: _LoweredTape, comp_cols: np.ndarray,
+                   post_nb: np.ndarray, site_sizes: list) -> _BoundIR:
+        """Column-stacked payload arrays -> a :class:`_BoundIR` (shared
+        tail of :meth:`bind` and :meth:`bind_arrays`)."""
+        st = self._static
+        B = comp_cols.shape[1]
+        po = self._p.a53_call_overhead_us
         n_items = len(st.items)
         item_cost = np.empty((n_items, B))
         item_cost[st.item_is_post] = po
@@ -682,14 +838,16 @@ class CompiledProgram(VecTransport):
                 nb=nb, is_rdv=is_rdv, any_e=bool((~is_rdv).any()),
                 any_r=bool(is_rdv.any()),
                 uni=bool((nb == nb[:1]).all())))
-        site_sizes = [tuple(int(d[2][s.idx]) for d in datas)
-                      for s in self._static.sites]
         return _BoundIR(B, lowered, post_off, seg_total, rank_compute,
                         b_levels, site_sizes)
 
     # ------------------------------------------------------------ execution
-    def run(self, bound: _BoundIR) -> list[ProgramResult]:
-        """Replay the bound columns; one :class:`ProgramResult` each."""
+    def run(self, bound: _BoundIR, *, engine=None) -> list[ProgramResult]:
+        """Replay the bound columns; one :class:`ProgramResult` each.
+        ``engine`` selects the scan backend (``"numpy"`` default,
+        ``"jax"``, or an engine object; DESIGN.md §2.5) — collective
+        splices inherit it."""
+        self._eng = resolve_engine(engine)
         st = self._static
         B = bound.B
         lowered = bound.lowered
@@ -763,7 +921,8 @@ class CompiledProgram(VecTransport):
             C[slot.exit] = enters.max(axis=0)[None, :] + cost[None, :]
             return
         rp, sched = slot.rp, slot.sched
-        res = rp.run(sched, sizes, state=state, t0=enters)
+        res = rp.run(sched, sizes, state=state, t0=enters,
+                     engine=self._eng)
         b = rp.bind(sched, sizes)
         C[slot.exit] = res.clocks.T + b.post_copy_us[None, :] + \
             self._p.barrier_exit_us

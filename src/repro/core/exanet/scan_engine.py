@@ -1,0 +1,209 @@
+"""Pluggable scan-engine seam for the compiled executors (DESIGN.md §2.5).
+
+The two kernels every compiled replay spends its time in — the segmented
+max-plus scan and the segmented running maximum of
+:mod:`repro.core.exanet.sim` — are pure array programs over a
+``(k, *batch)`` layout with data-independent combine masks.  That makes
+them retargetable: this module defines the engine interface the
+:class:`~repro.core.exanet.exec_compiled.VecTransport` kernels call
+through, with two implementations:
+
+* :class:`NumpyScanEngine` (``engine="numpy"``, the default) — delegates
+  to the in-place masked-ufunc scans in ``sim.py``.  No dependencies
+  beyond NumPy; the reference for the ≤1e-9 agreement tests.
+* :class:`JaxScanEngine` (``engine="jax"``) — the same Hillis-Steele
+  passes as ``jax.jit``-compiled kernels, ``jax.vmap``-batched over the
+  trailing batch axis.  jax is an *optional* dependency
+  (requirements-dev.txt): constructing the engine without it raises a
+  clear error, and everything else in the simulator keeps working.
+  Kernels run under a *scoped* ``jax.experimental.enable_x64`` context —
+  the compiled executor is held to ≤1e-9 agreement with the interpreter,
+  which float32 cannot meet — without flipping the process-global x64
+  flag (other jax users in the same process, e.g. the Layer-B models,
+  keep their own precision defaults).
+
+Engines are stateless beyond caches, so one instance serves every
+compiled program; executors resolve a per-call ``engine=`` argument
+through :func:`resolve_engine` (``None`` → numpy).  The combine masks
+arrive as the precomputed ``takes`` lists of
+:func:`~repro.core.exanet.sim.scan_take_masks` — shift offsets are
+static per stage (they key the jitted kernel cache), masks are traced
+operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.exanet.sim import (segmented_maxplus_scan,
+                                   segmented_running_max)
+
+
+class NumpyScanEngine:
+    """The default engine: sim.py's in-place masked-ufunc scans."""
+
+    name = "numpy"
+
+    def maxplus_scan(self, D, T, takes):
+        """Segmented max-plus scan; may clobber ``D``/``T`` (callers pass
+        freshly-built per-stage arrays)."""
+        return segmented_maxplus_scan(D, T, None, 0, takes=takes,
+                                      copy=False)
+
+    def running_max(self, v, takes):
+        return segmented_running_max(v, takes)
+
+
+_jax = None
+_enable_x64 = None
+
+
+def _load_jax():
+    """Import jax lazily; raise a clear error when the optional
+    dependency is absent (mirrors the hypothesis pattern in tests)."""
+    global _jax, _enable_x64
+    if _jax is None:
+        try:
+            import jax
+            from jax.experimental import enable_x64
+        except ImportError as e:
+            raise RuntimeError(
+                "scan engine 'jax' requires the optional jax dependency "
+                "(pip install \"jax[cpu]\"; see requirements-dev.txt). "
+                "The default engine='numpy' needs nothing extra."
+            ) from e
+        _jax, _enable_x64 = jax, enable_x64
+    return _jax
+
+
+@functools.lru_cache(maxsize=None)
+def _maxplus_kernel(shifts: tuple):
+    """jit+vmap max-plus kernel for one static shift sequence.  One
+    Hillis-Steele pass composes ``(D1,T1) then (D2,T2)`` into
+    ``(D1+D2, max(T1+D2, T2))`` where the take mask allows; vmap runs
+    every batch column through the same (k,)-vector kernel."""
+    jax = _load_jax()
+    jnp = jax.numpy
+
+    def one(D, T, masks):
+        for s, m in zip(shifts, masks):
+            T = T.at[s:].set(jnp.where(
+                m, jnp.maximum(T[:-s] + D[s:], T[s:]), T[s:]))
+            D = D.at[s:].set(jnp.where(m, D[:-s] + D[s:], D[s:]))
+        return D, T
+
+    return jax.jit(jax.vmap(one, in_axes=(1, 1, None), out_axes=1))
+
+
+@functools.lru_cache(maxsize=None)
+def _running_max_kernel(shifts: tuple):
+    jax = _load_jax()
+    jnp = jax.numpy
+
+    def one(v, masks):
+        for s, m in zip(shifts, masks):
+            v = v.at[s:].set(jnp.where(m, jnp.maximum(v[:-s], v[s:]),
+                                       v[s:]))
+        return v
+
+    return jax.jit(jax.vmap(one, in_axes=(1, None), out_axes=1))
+
+
+class JaxScanEngine:
+    """``jax.jit`` + ``jax.vmap`` lane of the same scan kernels.
+
+    Jitted kernels are cached per shift sequence (the static part of a
+    stage's ``takes``); the 1-D mask operands are cached per ``takes``
+    list identity — the cache holds a reference to the list itself, so a
+    recycled ``id()`` can never alias a dead stage.  Inputs and outputs
+    are NumPy arrays: conversion happens at this boundary only, and the
+    surrounding gather/scatter bookkeeping stays NumPy either way.
+    """
+
+    name = "jax"
+
+    def __init__(self):
+        _load_jax()
+        self._takes_cache: dict = {}
+
+    def _prep(self, takes):
+        key = id(takes)
+        ent = self._takes_cache.get(key)
+        if ent is None or ent[0] is not takes:
+            shifts = tuple(int(s) for s, _ in takes)
+            masks = tuple(np.ascontiguousarray(m[:, 0]) for _, m in takes)
+            ent = self._takes_cache[key] = (takes, shifts, masks)
+        return ent[1], ent[2]
+
+    def maxplus_scan(self, D, T, takes):
+        shifts, masks = self._prep(takes)
+        shape = T.shape
+        if D.shape != shape:
+            D = np.broadcast_to(D, shape)
+        if T.ndim != 2:
+            D = np.ascontiguousarray(D).reshape(shape[0], -1)
+            T = np.ascontiguousarray(T).reshape(shape[0], -1)
+        # scoped x64: the ≤1e-9 contract needs float64, but the flag must
+        # not leak to other jax users in the process (the x64 state keys
+        # the jit cache, so scoping is sound)
+        with _enable_x64():
+            Dj, Tj = _maxplus_kernel(shifts)(D, T, masks)
+            return (np.asarray(Dj).reshape(shape),
+                    np.asarray(Tj).reshape(shape))
+
+    def running_max(self, v, takes):
+        shifts, masks = self._prep(takes)
+        shape = v.shape
+        if v.ndim != 2:
+            v = np.ascontiguousarray(v).reshape(shape[0], -1)
+        with _enable_x64():
+            out = _running_max_kernel(shifts)(v, masks)
+            return np.asarray(out).reshape(shape)
+
+
+#: the default engine instance (module-level: every compiled program
+#: shares it, and ``resolve_engine(None)`` is an attribute read)
+NUMPY = NumpyScanEngine()
+
+_engines: dict = {"numpy": NUMPY}
+
+
+def available_engines() -> list[str]:
+    """Engine names usable in this environment (``jax`` only when the
+    optional dependency imports)."""
+    names = ["numpy"]
+    try:
+        _load_jax()
+    except RuntimeError:
+        pass
+    else:
+        names.append("jax")
+    return names
+
+
+def get_scan_engine(name: str = "numpy"):
+    """The shared engine instance for ``name``.  Raises ``ValueError``
+    for unknown names and ``RuntimeError`` when ``"jax"`` is requested
+    without jax installed."""
+    eng = _engines.get(name)
+    if eng is None:
+        if name != "jax":
+            raise ValueError(f"unknown scan engine {name!r}; "
+                             f"options: ['jax', 'numpy']")
+        eng = _engines["jax"] = JaxScanEngine()
+    return eng
+
+
+def resolve_engine(engine):
+    """Normalize a per-call ``engine=`` argument: ``None`` → the numpy
+    default, a name → the shared instance, an engine object → itself."""
+    if engine is None:
+        return NUMPY
+    if isinstance(engine, str):
+        return get_scan_engine(engine)
+    if hasattr(engine, "maxplus_scan") and hasattr(engine, "running_max"):
+        return engine
+    raise ValueError(f"not a scan engine: {engine!r} (pass 'numpy', "
+                     f"'jax', or an object with maxplus_scan/running_max)")

@@ -188,7 +188,11 @@ class Engine:
 # ---------------------------------------------------------------------------
 class ResourceState:
     """Vectorized ``free_at`` bookkeeping: one row per engine resource id
-    (:meth:`Engine.resource_id`), one column per batched message size.
+    (:meth:`Engine.resource_id`), one trailing *batch* axis per bound
+    binding — a message size of a sweep grid, a perturbed scenario of a
+    Monte-Carlo batch.  ``batch`` is an int (one flat column axis, the
+    common case) or a tuple of trailing dims (``(N, B)`` nests scenario
+    and size axes without reshaping the caller's data).
 
     The compiled executor replays a whole round program against one state;
     a run starts from all-zero occupancy, exactly like ``Engine.reset()``.
@@ -196,8 +200,10 @@ class ResourceState:
 
     __slots__ = ("free",)
 
-    def __init__(self, n_resources: int, batch: int):
-        self.free = np.zeros((n_resources, batch))
+    def __init__(self, n_resources: int, batch):
+        shape = (n_resources,) + (tuple(batch) if isinstance(batch, tuple)
+                                  else (int(batch),))
+        self.free = np.zeros(shape)
 
     def acquire_unique(self, rows: np.ndarray, t: np.ndarray,
                        dur) -> np.ndarray:
@@ -247,19 +253,26 @@ def segmented_maxplus_scan(dur: np.ndarray, t_plus_dur: np.ndarray,
     group resolves in ``ceil(log2(max_group))`` Hillis-Steele passes of
     plain array arithmetic instead of a Python loop over sends.
 
-    ``dur``/``t_plus_dur`` are (k, B) acquire arrays laid out so each
-    resource's acquires are contiguous and in send order; ``first`` is the
-    (k,) segment-start mask.  Returns ``(Dacc, Tacc)`` such that the
-    resource is next free at ``maximum(F0 + Dacc_i, Tacc_i)`` after its
-    i-th acquire, where ``F0`` is the segment's initial free time.
-    ``takes`` (from :func:`scan_take_masks`) skips recomputing the flag
-    evolution; ``copy=False`` lets the scan clobber its inputs.
+    ``dur``/``t_plus_dur`` are ``(k, *batch)`` acquire arrays laid out so
+    each resource's acquires are contiguous and in send order; ``first``
+    is the (k,) segment-start mask.  The trailing batch may be any number
+    of dims (``(k, B)`` size grids, ``(k, N, B)`` scenario x size
+    batches); the precomputed (m, 1) combine masks broadcast over one
+    trailing dim and are right-padded for deeper batches.  Returns
+    ``(Dacc, Tacc)`` such that the resource is next free at
+    ``maximum(F0 + Dacc_i, Tacc_i)`` after its i-th acquire, where ``F0``
+    is the segment's initial free time.  ``takes`` (from
+    :func:`scan_take_masks`) skips recomputing the flag evolution;
+    ``copy=False`` lets the scan clobber its inputs.
     """
     D = np.array(dur, copy=True) if copy else dur
     T = np.array(t_plus_dur, copy=True) if copy else t_plus_dur
     if takes is None:
         takes = scan_take_masks(first, max_group)
+    pad = T.ndim - 2
     for s, mask in takes:
+        if pad > 0:
+            mask = mask.reshape(mask.shape[0], *([1] * (T.ndim - 1)))
         # masked in-place ufuncs: numpy detects the self-overlap and
         # buffers internally, so this is the np.where form minus the
         # intermediate allocations (the scans are the replay hot loop)
@@ -273,7 +286,11 @@ def segmented_running_max(v: np.ndarray, takes: list) -> np.ndarray:
     with a group-constant duration ``d``, the serialization recurrence
     collapses to ``f_after_i = (k_i+1) d + max(F0, max_j<=i (t_j - k_j d))``
     — one plain-max scan over ``v = t - k d`` instead of the (D, T)
-    composition)."""
+    composition).  Like :func:`segmented_maxplus_scan`, ``v`` may carry
+    any number of trailing batch dims."""
+    pad = v.ndim - 2
     for s, mask in takes:
+        if pad > 0:
+            mask = mask.reshape(mask.shape[0], *([1] * (v.ndim - 1)))
         np.maximum(v[:-s], v[s:], out=v[s:], where=mask)
     return v

@@ -198,17 +198,19 @@ class TpuMachine:
                                  alpha_s=alpha, bw_bytes_per_s=bw)
 
     def cost_many(self, schedule: CollectiveSchedule, nranks: int, sizes,
-                  *, fidelity: str = "analytic", level: str | None = None
-                  ) -> list[float]:
+                  *, fidelity: str = "analytic", level: str | None = None,
+                  engine=None) -> list[float]:
         """Batched :meth:`cost_s` over a message-size grid.  Closed forms
         have no shared work to amortize, so this is the plain loop — the
-        method exists so the planner can batch uniformly across machines."""
+        method exists so the planner can batch uniformly across machines
+        (``engine``, a scan-backend choice for *simulated* machines, has
+        nothing to select here)."""
         return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
                             level=level) for s in sizes]
 
     def cost_program(self, prog, *, fidelity: str = "analytic",
                      level: str | None = None,
-                     backend: str = "auto") -> float:
+                     backend: str = "auto", engine=None) -> float:
         """Closed-form program time: the TPU target has no event
         simulator, so both fidelities are the contention-free alpha-beta
         walk of :func:`repro.core.program.analytic_program_us` (and
@@ -223,7 +225,8 @@ class TpuMachine:
 
     def cost_program_many(self, progs, *, fidelity: str = "analytic",
                           level: str | None = None,
-                          backend: str = "auto") -> list[float]:
+                          backend: str = "auto",
+                          engine=None) -> list[float]:
         """Batched :meth:`cost_program`: closed forms share no work, so
         this is the plain loop (uniform planner-facing surface)."""
         return [self.cost_program(p, fidelity=fidelity, level=level,
@@ -333,15 +336,16 @@ class ExanetMachine:
                                  alpha_s=alpha, bw_bytes_per_s=bw)
 
     def cost_many(self, schedule: CollectiveSchedule, nranks: int, sizes,
-                  *, fidelity: str = "sim", level: str | None = None
-                  ) -> list[float]:
+                  *, fidelity: str = "sim", level: str | None = None,
+                  engine=None) -> list[float]:
         """Batched :meth:`cost_s` over a message-size grid.  At ``sim``
         fidelity one compiled round program (the schedule lowered once for
         this rank count) serves the whole grid in a single vectorized
         replay — this is what cuts the planner's cold-plan cost from
         per-size event simulation to one batched run.  Serial-chain
         schedules the array executor cannot amortize (see
-        ``round_parallelism``) stay on the interpreter."""
+        ``round_parallelism``) stay on the interpreter.  ``engine``
+        selects the replay's scan backend (DESIGN.md §2.5)."""
         sizes = list(sizes)
         if nranks < 2 or not sizes:
             return [0.0] * len(sizes)
@@ -353,7 +357,8 @@ class ExanetMachine:
         try:
             if not mpi.compiled_profitable(schedule, nranks):
                 raise ProgramStructureError("serial-chain schedule")
-            res = mpi.run_schedule_many(schedule, sizes, nranks)
+            res = mpi.run_schedule_many(schedule, sizes, nranks,
+                                        engine=engine)
         except (ProgramStructureError, ValueError):
             # chain-bound, size-varying structure, or a tracing engine:
             # interpret per size
@@ -363,7 +368,7 @@ class ExanetMachine:
 
     def cost_program(self, prog, *, fidelity: str = "sim",
                      level: str | None = None,
-                     backend: str = "auto") -> float:
+                     backend: str = "auto", engine=None) -> float:
         """Program cost on the prototype.  ``fidelity="sim"`` executes the
         program on the event engine of the tier that fits its rank count
         (:meth:`ExanetMPI.run_program`: per-rank cores, contending
@@ -379,7 +384,8 @@ class ExanetMachine:
             return 0.0
         if fidelity == "sim":
             mpi = self._mpi_for(nranks)
-            return mpi.run_program(prog, backend=backend).latency_us * 1e-6
+            return mpi.run_program(prog, backend=backend,
+                                   engine=engine).latency_us * 1e-6
         alpha, bw = self.alpha_beta(level or self._default_level(nranks))
         from repro.core.program import analytic_program_us
         res = analytic_program_us(
@@ -390,7 +396,8 @@ class ExanetMachine:
 
     def cost_program_many(self, progs, *, fidelity: str = "sim",
                           level: str | None = None,
-                          backend: str = "auto") -> list[float]:
+                          backend: str = "auto",
+                          engine=None) -> list[float]:
         """Batched :meth:`cost_program` over many programs.  At ``sim``
         fidelity, programs are grouped per machine tier and handed to
         :meth:`ExanetMPI.run_program_many`, where structurally-identical
@@ -409,7 +416,7 @@ class ExanetMachine:
         for idxs in tiers.values():
             mpi = self._mpi_for(progs[idxs[0]].nranks)
             results = mpi.run_program_many([progs[i] for i in idxs],
-                                           backend=backend)
+                                           backend=backend, engine=engine)
             for i, r in zip(idxs, results):
                 out[i] = r.latency_us * 1e-6
         return out

@@ -110,9 +110,15 @@ GRAD_SYNC_STRATEGIES = ("flat", "hierarchical", "compressed")
 class CollectivePlanner:
     """Cost-driven collective schedule selection on one machine model."""
 
-    def __init__(self, machine: MachineModel, *, fidelity: str = "analytic"):
+    def __init__(self, machine: MachineModel, *, fidelity: str = "analytic",
+                 engine=None):
+        """``engine`` — scan backend forwarded to the machine's batched
+        ``sim``-fidelity costing (:meth:`plan_many`; ``"numpy"`` default |
+        ``"jax"``, DESIGN.md §2.5).  Plans are engine-independent (the
+        engines agree to 1e-9), so the cache never keys on it."""
         self.machine = machine
         self.fidelity = fidelity
+        self.engine = engine
         self._cache: dict[tuple, Plan] = {}
         self._hits = 0
         self._misses = 0
@@ -197,7 +203,8 @@ class CollectivePlanner:
                 if not feasible:
                     continue
                 for s, c in zip(feasible, m.cost_many(sched, p, feasible,
-                                                      fidelity=fidelity)):
+                                                      fidelity=fidelity,
+                                                      engine=self.engine)):
                     costs_by_size[s].append((name, c))
             for s in missing:
                 key = (op, s, participants, fidelity, allow_lossy)

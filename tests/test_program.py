@@ -216,9 +216,15 @@ def test_run_schedule_t0_is_time_shift_invariant(mpi):
                                backend="interp", t0=[100.0] * 8)
     assert shifted.latency_us == pytest.approx(base.latency_us + 100.0,
                                                rel=1e-12)
+    # a skewed fresh start is exact on the compiled backend too; only
+    # reset=False (nonzero live occupancy) stays interpreter-only
+    compiled = mpi.run_schedule(RecursiveDoublingAllreduce(), 1024, 8,
+                                backend="compiled", t0=[100.0] * 8)
+    assert compiled.latency_us == pytest.approx(shifted.latency_us,
+                                                rel=1e-9)
     with pytest.raises(ValueError, match="compiled"):
         mpi.run_schedule(RecursiveDoublingAllreduce(), 1024, 8,
-                         backend="compiled", t0=[0.0] * 8)
+                         backend="compiled", t0=[0.0] * 8, reset=False)
 
 
 # ------------------------------------------------- congestion is emergent

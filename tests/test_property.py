@@ -284,6 +284,34 @@ def _program_mpis():
     return m
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(["numpy", "jax"]))
+def test_batched_programs_equal_per_binding_loop(seed, engine):
+    """The hypothesis twin of test_batch_engine.py's batch fuzz: a batch
+    of payload variants of one random program, replayed as columns of a
+    single compiled artifact (run_program_many -> bind_batch), equals
+    the per-program interpreter loop to 1e-9 — random structures, tag
+    permutations, eager/rendez-vous payloads, compute skew, both scan
+    engines."""
+    import random as _random
+
+    from repro.core.exanet.program_compiled import (extract_data,
+                                                    rebind_program)
+    from test_program_compiled import _assert_equal, _fuzz_program
+    rng = _random.Random(seed)
+    base = _fuzz_program(rng, rng.choice([2, 4, 8]))
+    comp, post, _ = extract_data(base)
+    f, g = rng.uniform(0.0, 8.0), rng.uniform(0.25, 4.0)
+    progs = [base, rebind_program(
+        base, compute_us=[c * g for c in comp],
+        post_nbytes=[int(round(x * f)) for x in post])]
+    m = _program_mpis()[None]
+    got = m.run_program_many(progs, backend="compiled", engine=engine)
+    for p, r in zip(progs, got):
+        _assert_equal(m.run_program(p, backend="interp"), r,
+                      ("batch-hyp", seed, engine))
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 10 ** 6), st.sampled_from([2, 4, 8, 12, 16]),
        st.sampled_from([None, 1]))
