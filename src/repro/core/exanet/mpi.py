@@ -493,7 +493,7 @@ class ExanetMPI:
         return art
 
     def run_program(self, prog, *, plans: dict | None = None,
-                    backend: str = "auto", engine=None):
+                    backend: str = "auto", engine=None, t0=None):
         """Execute a :class:`repro.core.program.Program` on the event engine.
 
         Every rank's ops run concurrently: ``Compute`` occupies the rank's
@@ -529,12 +529,26 @@ class ExanetMPI:
         ``engine`` selects the compiled path's scan backend (``"numpy"``
         default | ``"jax"``; DESIGN.md §2.5) and is ignored by the
         interpreter.
+
+        ``t0`` skews per-rank start clocks: a scalar or an (nranks,)
+        sequence of entry times in microseconds (request-arrival /
+        dispatch jitter for serving Programs).  Both backends honor it;
+        exactness of the compiled path under skew follows the same
+        payload-invariant-firing-order contract as
+        :meth:`run_program_scenarios` documents.
         """
         if backend not in ("auto", "interp", "compiled"):
             raise ValueError(f"unknown backend {backend!r}; "
                              f"options: ['auto', 'compiled', 'interp']")
         from repro.core.program import ProgramExecutor
         nranks = prog.nranks
+        if t0 is not None:
+            t0 = np.asarray(t0, dtype=np.float64)
+            if t0.ndim == 0:
+                t0 = np.full(nranks, float(t0))
+            elif t0.shape != (nranks,):
+                raise ValueError(f"t0 must be scalar or (nranks,); got "
+                                 f"shape {t0.shape} for nranks={nranks}")
         default_plans = plans is None
         tracing = self.net.engine.tracing
         if backend == "compiled" and tracing:
@@ -567,7 +581,7 @@ class ExanetMPI:
                         art, art.bind((prog,), (plans,)))
                     if default_plans:
                         memo[id(prog)] = ent
-                return ent[1].run(ent[2], engine=engine)[0]
+                return ent[1].run(ent[2], engine=engine, t0=t0)[0]
             except ProgramStructureError:
                 if backend == "compiled":
                     raise
@@ -578,7 +592,8 @@ class ExanetMPI:
         self.net.reset()
         return ProgramExecutor(
             prog, **hooks,
-            post_overhead_us=self.p.a53_call_overhead_us).run()
+            post_overhead_us=self.p.a53_call_overhead_us).run(
+                t0=0.0 if t0 is None else t0)
 
     def run_program_many(self, progs, *, plans=None,
                          backend: str = "auto", engine=None) -> list:
@@ -639,7 +654,8 @@ class ExanetMPI:
         return out
 
     def run_program_scenarios(self, prog, *, compute_scale=None,
-                              byte_scale=None, plans: dict | None = None,
+                              byte_scale=None, site_scale=None,
+                              t0=None, plans: dict | None = None,
                               engine=None, check: int = 0,
                               rtol: float = 1e-9) -> list:
         """Monte-Carlo scenario sweep of one Program as a single batched
@@ -649,14 +665,21 @@ class ExanetMPI:
 
         ``compute_scale`` — (N,) per-scenario or (nranks, N) per-rank
         multiplicative compute skew; ``byte_scale`` — (N,) per-scenario
-        multiplier on every point-to-point payload (rounded to whole
-        bytes; collective sites keep their base size, so the planner's
-        schedule choice — and with it the probe tape — is
-        scenario-invariant).  ``check`` > 0 cross-checks that many
+        or (n_posts, N) per-post multiplier on point-to-point payloads
+        (rounded to whole bytes); ``site_scale`` — (N,) per-scenario or
+        (n_sites, N) per-collective-site multiplier on embedded
+        collective payloads (rounded; every scaled size must resolve to
+        the *same* schedule as the base site — single-schedule ops and
+        explicit ``algo=`` are always safe, ``algo="auto"`` allreduce
+        sites may cross a planner decision boundary and are rejected by
+        ``bind_arrays``); ``t0`` — (nranks, N) per-rank per-scenario
+        entry clocks in microseconds (the request-arrival-skew axis for
+        serving Programs).  ``check`` > 0 cross-checks that many
         evenly-sampled columns against the interpreter
-        (:func:`rebind_program` hands it the perturbed column) and raises
-        if any latency disagrees beyond ``rtol`` relative — the guard for
-        builders whose scheduling order is *not* payload-invariant.
+        (:func:`rebind_program` hands it the perturbed column, with the
+        column's ``t0``) and raises if any latency disagrees beyond
+        ``rtol`` relative — the guard for builders whose scheduling
+        order is *not* payload-invariant.
 
         Returns N :class:`~repro.core.program.ProgramResult`\\ s.
         """
@@ -665,7 +688,8 @@ class ExanetMPI:
         base = extract_data(prog)
         N = None
         for nm, a in (("compute_scale", compute_scale),
-                      ("byte_scale", byte_scale)):
+                      ("byte_scale", byte_scale),
+                      ("site_scale", site_scale), ("t0", t0)):
             if a is not None:
                 n = np.asarray(a).shape[-1]
                 if N is None:
@@ -673,10 +697,13 @@ class ExanetMPI:
                 elif n != N:
                     raise ValueError(f"{nm} disagrees on N ({n} vs {N})")
         if N is None:
-            raise ValueError("give compute_scale and/or byte_scale")
-        comp_cols = post_cols = None
+            raise ValueError(
+                "give at least one of compute_scale / byte_scale / "
+                "site_scale / t0")
+        comp_cols = post_cols = site_cols = t0_cols = None
         base_comp = np.array(base[0], dtype=np.float64)
         base_post = np.array(base[1], dtype=np.float64)
+        base_site = np.array(base[2], dtype=np.float64)
         if compute_scale is not None:
             cs = np.asarray(compute_scale, dtype=np.float64)
             if cs.ndim == 1:
@@ -691,12 +718,52 @@ class ExanetMPI:
                     cs[art0._static.compute_rank]
         if byte_scale is not None:
             bs = np.asarray(byte_scale, dtype=np.float64)
-            post_cols = np.rint(base_post[:, None] * bs[None, :])
+            if bs.ndim == 1:
+                post_cols = np.rint(base_post[:, None] * bs[None, :])
+            else:
+                if bs.shape[0] != len(base_post):
+                    raise ValueError(
+                        f"byte_scale must be (N,) or (n_posts, N); got "
+                        f"{bs.shape} for n_posts={len(base_post)}")
+                post_cols = np.rint(base_post[:, None] * bs)
+        if site_scale is not None:
+            ss = np.asarray(site_scale, dtype=np.float64)
+            if ss.ndim == 1:
+                site_cols = np.rint(base_site[:, None] * ss[None, :]
+                                    ).astype(np.int64)
+            else:
+                if ss.shape[0] != len(base_site):
+                    raise ValueError(
+                        f"site_scale must be (N,) or (n_sites, N); got "
+                        f"{ss.shape} for n_sites={len(base_site)}")
+                site_cols = np.rint(base_site[:, None] * ss
+                                    ).astype(np.int64)
+        if t0 is not None:
+            t0_cols = np.asarray(t0, dtype=np.float64)
+            if t0_cols.shape != (prog.nranks, N):
+                raise ValueError(
+                    f"t0 must be (nranks, N); got {t0_cols.shape} for "
+                    f"nranks={prog.nranks}, N={N}")
+        if (comp_cols is None and post_cols is None and site_cols is None
+                and t0_cols is not None):
+            # t0-only sweep: bind_arrays infers N from payload arrays, so
+            # hold one of them constant across the N columns explicitly
+            if len(base_comp):
+                comp_cols = np.broadcast_to(
+                    base_comp[:, None], (len(base_comp), N))
+            elif len(base_post):
+                post_cols = np.broadcast_to(
+                    base_post[:, None], (len(base_post), N))
+            else:
+                site_cols = np.broadcast_to(
+                    np.array(base[2], dtype=np.int64)[:, None],
+                    (len(base_site), N))
         plans = self._plan_program_sites(prog, plans)
         art = self.program_artifact(prog)
         bound = art.bind_arrays(prog, compute_us=comp_cols,
-                                post_nbytes=post_cols, plans=plans)
-        results = art.run(bound, engine=engine)
+                                post_nbytes=post_cols,
+                                site_nbytes=site_cols, plans=plans)
+        results = art.run(bound, engine=engine, t0=t0_cols)
         if check > 0:
             cols = np.unique(np.linspace(0, N - 1, min(int(check), N))
                              .astype(np.int64))
@@ -706,8 +773,12 @@ class ExanetMPI:
                     compute_us=None if comp_cols is None
                     else comp_cols[:, b],
                     post_nbytes=None if post_cols is None
-                    else post_cols[:, b])
-                ref = self.run_program(pb, plans=plans, backend="interp")
+                    else post_cols[:, b],
+                    site_nbytes=None if site_cols is None
+                    else site_cols[:, b])
+                ref = self.run_program(pb, plans=plans, backend="interp",
+                                       t0=None if t0_cols is None
+                                       else t0_cols[:, b])
                 err = abs(results[b].latency_us - ref.latency_us) / \
                     max(abs(ref.latency_us), 1e-30)
                 if err > rtol:

@@ -228,6 +228,7 @@ class _Static:
             np.searchsorted(first_gids, comp_gids, side="right") - 1
             if self.n_computes else np.zeros(0, dtype=np.int64))
         self.last_gid_arr = np.array(self.last_gid, dtype=np.int64)
+        self.first_gid_arr = first_gids
 
 
 def extract_data(prog: Program) -> tuple:
@@ -842,17 +843,36 @@ class CompiledProgram(VecTransport):
                         b_levels, site_sizes)
 
     # ------------------------------------------------------------ execution
-    def run(self, bound: _BoundIR, *, engine=None) -> list[ProgramResult]:
+    def run(self, bound: _BoundIR, *, engine=None,
+            t0=None) -> list[ProgramResult]:
         """Replay the bound columns; one :class:`ProgramResult` each.
         ``engine`` selects the scan backend (``"numpy"`` default,
         ``"jax"``, or an engine object; DESIGN.md §2.5) — collective
-        splices inherit it."""
+        splices inherit it.
+
+        ``t0`` seeds per-rank entry clocks: ``(nranks,)`` applied to all
+        columns, or ``(nranks, B)`` per column — the Program-IR twin of
+        the schedule replay's arrival-offset axis (exact for the same
+        reason: resources start at zero occupancy, so an offset start is
+        just a shifted first segment).  Like payload perturbations, the
+        columns share the base probe tape; skews large enough to reorder
+        the scheduler's firing are the cross-check's (``check=``) job to
+        catch."""
         self._eng = resolve_engine(engine)
         st = self._static
         B = bound.B
         lowered = bound.lowered
         state = ResourceState(lowered.n_rows, B)
         C = np.zeros((st.n_segs, B))
+        if t0 is not None:
+            t0 = np.asarray(t0, dtype=np.float64)
+            if t0.ndim == 1:
+                t0 = t0[:, None]
+            if t0.shape != (self.nranks, 1) and t0.shape != (self.nranks, B):
+                raise ValueError(
+                    f"t0 must have shape ({self.nranks},) or "
+                    f"({self.nranks}, {B}), got {t0.shape}")
+            C[st.first_gid_arr] = t0
         n_events = len(st.events)
         send_done = np.empty((n_events, B))
         recv_done = np.empty((n_events, B))

@@ -37,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from collections import deque
-from typing import Callable, Iterator, Union
+from typing import Callable, Iterator, Sequence, Union
 
 
 class ProgramError(Exception):
@@ -346,10 +346,17 @@ class ProgramExecutor:
             send.t_post, recv.t_post)
         self._n_sends += 1
 
-    def run(self, t0: float = 0.0) -> ProgramResult:
+    def run(self, t0: float | Sequence[float] = 0.0) -> ProgramResult:
         prog = self.prog
         n = prog.nranks
-        clock = [t0] * n
+        if hasattr(t0, "__len__"):
+            t0s = [float(v) for v in t0]
+            if len(t0s) != n:
+                raise ProgramError(
+                    f"t0 has {len(t0s)} entries for {n} ranks")
+        else:
+            t0s = [float(t0)] * n
+        clock = list(t0s)
         pc = [0] * n
         compute_tot = [0.0] * n
         self._n_sends = 0
@@ -364,7 +371,7 @@ class ProgramExecutor:
         blocked: dict[int, tuple] = {}
         coll_idx = [0] * n
         barriers: dict[int, dict[int, float]] = {}
-        ready = [(t0, r) for r in range(n) if prog.rank_ops[r]]
+        ready = [(t0s[r], r) for r in range(n) if prog.rank_ops[r]]
         heapq.heapify(ready)
 
         def wake_waiters() -> None:
@@ -470,7 +477,8 @@ class ProgramExecutor:
                 f"program completed with {len(dangling)} unmatched "
                 f"request(s); first: rank {d.rank} {kind} peer={d.peer} "
                 f"tag={d.tag} ({d.nbytes} B)")
-        return ProgramResult(max(clock) if clock else t0, tuple(clock),
+        return ProgramResult(max(clock) if clock else max(t0s, default=0.0),
+                             tuple(clock),
                              tuple(compute_tot), self._n_sends, n_coll)
 
     @staticmethod

@@ -1,6 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Drives the slot-based continuous-batching engine with synthetic requests.
+Drives the slot-based continuous-batching engine with synthetic requests
+and reports per-request latency in *engine steps* (submit -> done) — the
+same quantity the simulated lane (``repro.serve.sim`` +
+``benchmarks/serve_sweep.py``) reports in simulated microseconds, so the
+real engine and the simulator publish comparable distributions.
 """
 
 from __future__ import annotations
@@ -25,6 +29,10 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--window", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for the synthetic requests "
+                         "(deterministic token streams per seed)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args(argv)
 
@@ -34,10 +42,11 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServeEngine(model, params, slots=args.slots, window=args.window)
-    rng = np.random.default_rng(0)
-    rids = [eng.submit(list(rng.integers(0, cfg.vocab_size, size=5)),
-                       max_new_tokens=args.max_new)
-            for _ in range(args.requests)]
+    rng = np.random.default_rng(args.seed)
+    rids = [eng.submit(
+        list(rng.integers(0, cfg.vocab_size, size=args.prompt_len)),
+        max_new_tokens=args.max_new)
+        for _ in range(args.requests)]
     t0 = time.perf_counter()
     steps = eng.run_until_idle(max_steps=10000)
     dt = time.perf_counter() - t0
@@ -45,6 +54,18 @@ def main(argv=None):
     toks = sum(len(eng.result(r) or []) for r in rids)
     print(f"served {done}/{args.requests} requests, {toks} tokens in "
           f"{steps} engine steps, {dt:.2f}s ({toks/max(dt,1e-9):.1f} tok/s)")
+    stats = eng.request_steps()
+    if stats:
+        lat = np.sort(np.array([d - s for s, d in stats.values()],
+                               dtype=np.float64))
+        print(f"latency (submit->done, engine steps): "
+              f"p50={np.quantile(lat, 0.5):.0f} "
+              f"p90={np.quantile(lat, 0.9):.0f} "
+              f"p99={np.quantile(lat, 0.99):.0f} max={lat.max():.0f}")
+        for rid in sorted(stats)[:8]:
+            s, d = stats[rid]
+            print(f"  request {rid}: submit@{s} done@{d} "
+                  f"({d - s} steps, {len(eng.result(rid) or [])} tokens)")
 
 
 if __name__ == "__main__":

@@ -101,6 +101,53 @@ def model_flops_per_step(meta: dict, shape_kind: str, tokens: int) -> float:
     return mult * n * tokens
 
 
+def lm_serve_step_cost(cfg, *, n_decode: float, decode_kv: float,
+                       n_prefill: float = 0.0, prefill_kv: float = 0.0,
+                       dtype_bytes: int = 2) -> dict:
+    """Closed-form cost of ONE continuous-batching serving step for an
+    :class:`~repro.config.ArchConfig` — the config-derived twin of what
+    :mod:`repro.roofline.hlo_cost` measures on compiled HLO, cheap enough
+    to evaluate per simulated step for any config (compiling a real
+    deepseek-7b decode graph to read its HLO would dwarf the simulation).
+
+    A step advances ``n_decode`` in-flight requests by one token (KV
+    context ``decode_kv`` each, the batch mean) and pushes ``n_prefill``
+    new prompt tokens through (on top of ``prefill_kv`` already-cached
+    tokens; causal attention is charged at the mean context
+    ``prefill_kv + n_prefill/2``).  FLOPs use the 2*N-per-token rule of
+    :func:`model_flops_per_step` plus the KV-length-dependent attention
+    term that rule omits; HBM bytes charge one weight sweep per step
+    (shared by every token in the batch — the continuous-batching
+    economy) plus KV reads/writes.  Returned collective payloads are
+    whole-model totals; tensor-parallel sharding (the /nranks) is the
+    caller's concern (:mod:`repro.serve.sim`).
+    """
+    P = float(cfg.param_count())
+    L, hd = cfg.n_layers, cfg.resolved_head_dim
+    kv_tok = L * 2.0 * cfg.n_kv_heads * hd * dtype_bytes  # bytes/token
+    attn_fl_tok = 4.0 * L * cfg.n_heads * hd              # flops/token/ctx
+    nd, npf = float(n_decode), float(n_prefill)
+    tokens = nd + npf
+    pf_ctx = prefill_kv + npf / 2.0
+    flops = (nd * (2.0 * P + attn_fl_tok * decode_kv)
+             + npf * (2.0 * P + attn_fl_tok * pf_ctx))
+    hbm = 0.0
+    if tokens > 0:
+        hbm += P * dtype_bytes                       # one weight sweep
+        hbm += nd * decode_kv * kv_tok               # decode KV reads
+        hbm += npf * pf_ctx * kv_tok                 # prefill KV reads
+        hbm += tokens * kv_tok                       # KV writes
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        # per-token activation gather payload (one hidden vector each)
+        "act_bytes": tokens * cfg.d_model * dtype_bytes,
+        # KV shards migrated for the newly-prefilled tokens
+        "kv_bytes": npf * kv_tok,
+        "kv_bytes_per_token": kv_tok,
+    }
+
+
 def roofline_from_compiled(compiled, meta: dict, hw=V5E) -> dict:
     """Roofline terms from the compiled artifact.
 

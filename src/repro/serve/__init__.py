@@ -1,3 +1,20 @@
-from repro.serve.engine import ServeEngine, Request
+"""Serving stack: the real jitted engine (:mod:`repro.serve.engine`)
+and its simulated twin on the event engine (:mod:`repro.serve.sim`,
+:mod:`repro.serve.traffic`).
 
-__all__ = ["ServeEngine", "Request"]
+Engine classes load lazily so the numpy-only simulator side
+(``repro.serve.sim`` / ``repro.serve.traffic``) imports without jax.
+"""
+
+__all__ = ["ServeEngine", "Request", "ServeSim", "ServeSimSpec",
+           "StepTable"]
+
+
+def __getattr__(name):
+    if name in ("ServeEngine", "Request"):
+        from repro.serve import engine
+        return getattr(engine, name)
+    if name in ("ServeSim", "ServeSimSpec", "StepTable"):
+        from repro.serve import sim
+        return getattr(sim, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -5,13 +5,20 @@ decode step serves many concurrent requests. Requests occupy fixed slots of
 a shared KV cache; prefill fills a slot (padded to the window), decode
 advances all active slots together; finished slots are recycled without
 recompiling (static shapes throughout).
+
+Prefill is batched across admissions: all slots admitted in one ``step()``
+teacher-force their prompts together, one jitted ``decode_step`` call per
+token *index* (rows whose prompt is shorter sit out behind the same
+static shape) — admitting k slots with P-token prompts costs max(P)
+dispatches, not k*P.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional
+from collections import deque
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +32,9 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     generated: list[int] = dataclasses.field(default_factory=list)
+    #: engine step counter at submit / completion (for latency summaries)
+    submit_step: int = 0
+    done_step: Optional[int] = None
 
     @property
     def done(self) -> bool:
@@ -45,15 +55,20 @@ class ServeEngine:
         self.cache = model.init_cache(slots, window)
         self.pos = np.zeros(slots, np.int32)           # next write position
         self.active: list[Optional[Request]] = [None] * slots
-        self._queue: list[Request] = []
+        self._queue: deque[Request] = deque()
         self._rid = itertools.count()
         self._decode = jax.jit(model.decode_step)
         self._results: dict[int, Request] = {}
+        self._steps = 0
 
     # ------------------------------------------------------------- frontend
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                eos_id: int | None = None) -> int:
-        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        if not prompt:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "token to condition its first output on")
+        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id,
+                    submit_step=self._steps)
         self._queue.append(r)
         return r.rid
 
@@ -61,37 +76,64 @@ class ServeEngine:
         r = self._results.get(rid)
         return list(r.generated) if r is not None else None
 
+    def request_steps(self) -> dict[int, tuple[int, int]]:
+        """``rid -> (submit_step, done_step)`` for every completed
+        request — the engine-side timestamps the simulator's per-request
+        latencies are compared against."""
+        return {rid: (r.submit_step, r.done_step)
+                for rid, r in self._results.items()}
+
     # ------------------------------------------------------------- scheduler
     def _admit(self):
+        admitted: list[Request] = []
+        slots_adm: list[int] = []
         for slot in range(self.slots):
             if self.active[slot] is None and self._queue:
-                r = self._queue.pop(0)
+                r = self._queue.popleft()
                 self.active[slot] = r
-                # prefill the slot by teacher-forcing the prompt through
-                # decode steps (slot-local; avoids a second compiled graph);
-                # leaves this slot's next-token logits in self._pending
                 self.pos[slot] = 0
-                for tok in r.prompt:
-                    self._step_one_slot(slot, tok)
+                admitted.append(r)
+                slots_adm.append(slot)
+        if not admitted:
+            return
+        # batched prefill: teacher-force all admitted prompts together,
+        # one decode_step dispatch per token index (short prompts finish
+        # early and sit out of later calls); leaves each admitted slot's
+        # next-token logits in self._pending
+        for k in range(max(len(r.prompt) for r in admitted)):
+            toks = np.zeros(self.slots, np.int32)
+            live = []
+            for slot, r in zip(slots_adm, admitted):
+                if k < len(r.prompt):
+                    toks[slot] = r.prompt[k]
+                    live.append(slot)
+            self._step_slots(live, toks)
 
-    def _step_one_slot(self, slot: int, token: int):
-        """Feed one token into a slot; records the resulting logits as the
-        slot's pending next-token distribution.
+    def _step_slots(self, slots: Sequence[int], toks: np.ndarray):
+        """Feed one token into each slot in ``slots`` (``toks`` is the
+        full-width token row; other rows carry a harmless filler that is
+        overwritten at the same position before those slots advance).
+        Records the resulting logits as each stepped slot's pending
+        next-token distribution.
 
-        Uses per-row positions so concurrent slots at different depths never
-        touch each other's cache rows (continuous batching)."""
-        toks = np.zeros(self.slots, np.int32)
-        toks[slot] = token
+        Uses per-row positions so concurrent slots at different depths
+        never touch each other's cache rows (continuous batching)."""
         pos = np.maximum(self.pos, 0).astype(np.int32)
         logits, cache = self._decode(
             self.params, self.cache,
             {"token": jnp.asarray(toks), "pos": jnp.asarray(pos)})
         self.cache = cache
-        self.pos[slot] += 1
         if not hasattr(self, "_pending"):
             self._pending = np.zeros((self.slots,
                                       logits.shape[-1]), np.float32)
-        self._pending[slot] = np.asarray(logits[slot, 0], np.float32)
+        for slot in slots:
+            self.pos[slot] += 1
+            self._pending[slot] = np.asarray(logits[slot, 0], np.float32)
+
+    def _step_one_slot(self, slot: int, token: int):
+        toks = np.zeros(self.slots, np.int32)
+        toks[slot] = token
+        self._step_slots([slot], toks)
 
     def step(self) -> int:
         """One engine step: admit + advance every active slot by one token
@@ -100,11 +142,13 @@ class ServeEngine:
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
             return 0
+        self._steps += 1
         for slot in act:
             r = self.active[slot]
             nxt = int(np.argmax(self._pending[slot]))
             r.generated.append(nxt)
             if r.done:
+                r.done_step = self._steps
                 self._results[r.rid] = r
                 self.active[slot] = None
                 self.pos[slot] = 0

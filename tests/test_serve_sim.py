@@ -1,0 +1,275 @@
+"""Serving simulator tests: the scenario-axis seams (per-rank t0,
+site_scale, per-post byte_scale), the serve-step Program emitter, the
+batched step table vs the per-step lane, and the open-loop traffic
+replay's queueing arithmetic."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.exanet.mpi import ExanetMPI
+from repro.core.exanet.params import DEFAULT
+from repro.core.program import (Collective, Compute, Irecv, Isend, Program,
+                                ProgramError, Wait)
+from repro.serve import traffic
+from repro.serve.sim import ServeSim, ServeSimSpec
+
+
+@pytest.fixture(scope="module")
+def mpi():
+    return ExanetMPI(DEFAULT)
+
+
+def serve_like_program(nranks=8, us=5.0, act=4096, kv=1024) -> Program:
+    ops = (Compute(us=us),
+           Collective(op="allgather", nbytes=act,
+                      algo="recursive_doubling"),
+           Collective(op="alltoall", nbytes=kv, algo="pairwise"))
+    return Program(tuple(ops for _ in range(nranks)))
+
+
+# --------------------------------------------------------------- t0 seam
+def test_t0_interp_matches_compiled(mpi):
+    prog = serve_like_program()
+    t0 = np.random.default_rng(0).uniform(0.0, 3.0, 8)
+    a = mpi.run_program(prog, backend="interp", t0=t0)
+    b = mpi.run_program(prog, backend="compiled", t0=t0)
+    assert abs(a.latency_us - b.latency_us) <= 1e-9 * abs(a.latency_us)
+    for x, y in zip(a.clocks, b.clocks):
+        assert abs(x - y) <= 1e-9 * max(abs(x), 1e-12)
+
+
+def test_t0_scalar_shifts_everything(mpi):
+    prog = serve_like_program()
+    a = mpi.run_program(prog, backend="interp")
+    b = mpi.run_program(prog, backend="interp", t0=7.5)
+    assert b.latency_us == pytest.approx(a.latency_us + 7.5, rel=1e-12)
+
+
+def test_t0_wrong_length_rejected(mpi):
+    prog = serve_like_program()
+    with pytest.raises((ValueError, ProgramError)):
+        mpi.run_program(prog, backend="interp", t0=[1.0, 2.0])
+
+
+def test_t0_on_p2p_program_agrees(mpi):
+    # the seam is not collective-specific: a halo-style ring with waits
+    ops = []
+    for r in range(4):
+        ops.append((Compute(us=2.0), Isend(dst=(r + 1) % 4, nbytes=512,
+                                           tag=3),
+                    Irecv(src=(r - 1) % 4, nbytes=512, tag=3), Wait()))
+    prog = Program(tuple(ops))
+    t0 = np.array([0.0, 0.4, 0.1, 0.3])
+    a = mpi.run_program(prog, backend="interp", t0=t0)
+    b = mpi.run_program(prog, backend="compiled", t0=t0)
+    assert abs(a.latency_us - b.latency_us) <= 1e-9 * abs(a.latency_us)
+
+
+# ------------------------------------------------- scenario-axis seams
+def test_scenarios_site_scale_and_t0_checked(mpi):
+    prog = serve_like_program()
+    rng = np.random.default_rng(1)
+    N = 10
+    cs = rng.uniform(0.5, 2.0, (8, N))
+    ss = rng.uniform(0.25, 3.0, (2, N))
+    t0 = rng.uniform(0.0, 4.0, (8, N))
+    # check=N: every column re-run on the interpreter, raises on >1e-9
+    res = mpi.run_program_scenarios(prog, compute_scale=cs, site_scale=ss,
+                                    t0=t0, check=N)
+    assert len(res) == N
+    assert all(r.latency_us > 0 for r in res)
+
+
+def test_scenarios_t0_only_sweep(mpi):
+    prog = serve_like_program()
+    t0 = np.random.default_rng(2).uniform(0.0, 5.0, (8, 6))
+    res = mpi.run_program_scenarios(prog, t0=t0, check=6)
+    assert len(res) == 6
+    # columns with larger skew must not finish earlier than the skew
+    assert all(r.latency_us >= t0[:, i].max()
+               for i, r in enumerate(res))
+
+
+def test_scenarios_per_post_byte_scale(mpi):
+    # per-post scaling must keep matched send/recv pairs consistent;
+    # scale per ring channel and map it to both endpoints
+    ops = []
+    for r in range(4):
+        ops.append((Compute(us=1.0), Isend(dst=(r + 1) % 4, nbytes=2048,
+                                           tag=7),
+                    Irecv(src=(r - 1) % 4, nbytes=2048, tag=7), Wait()))
+    prog = Program(tuple(ops))
+    rng = np.random.default_rng(3)
+    chan = rng.uniform(0.3, 4.0, (4, 5))
+    bs = np.empty((8, 5))
+    for r in range(4):
+        bs[2 * r] = chan[r]                  # rank r's Isend
+        bs[2 * ((r + 1) % 4) + 1] = chan[r]  # peer's matching Irecv
+    res = mpi.run_program_scenarios(prog, byte_scale=bs, check=5)
+    assert len(res) == 5
+
+
+def test_scenarios_inconsistent_per_post_scale_rejected(mpi):
+    ops = []
+    for r in range(4):
+        ops.append((Isend(dst=(r + 1) % 4, nbytes=2048, tag=7),
+                    Irecv(src=(r - 1) % 4, nbytes=2048, tag=7), Wait()))
+    prog = Program(tuple(ops))
+    bs = np.random.default_rng(4).uniform(0.3, 4.0, (8, 3))
+    with pytest.raises(ProgramError):
+        mpi.run_program_scenarios(prog, byte_scale=bs)
+
+
+# ------------------------------------------------------------- the emitter
+def small_spec(**kw) -> ServeSimSpec:
+    base = dict(arch="exanest-lm-100m", nranks=8, slots=3, window=128,
+                prefill_chunk=32, kv_buckets=2, arrival_skew_us=1.0)
+    base.update(kw)
+    return ServeSimSpec(**base)
+
+
+def test_emitted_structure_is_state_invariant():
+    sim = ServeSim(small_spec())
+    key = None
+    for (nd, npf, kvb) in sim.step_states():
+        prog = sim.emit_step(nd, npf, float(sim.spec.kv_centers()[kvb]))
+        k = prog.structure_key()
+        assert key is None or k == key, \
+            "serve steps must all bind to one artifact"
+        key = k
+
+
+def test_kv_exchange_op_switches_at_rank_cap():
+    assert ServeSim(small_spec()).kv_exchange_op() == \
+        ("alltoall", "pairwise")
+    sim = ServeSim(small_spec(nranks=256, alltoall_max_ranks=128))
+    assert sim.kv_exchange_op() == ("allgather", "recursive_doubling")
+
+
+def test_step_cost_monotone_in_load_and_kv():
+    sim = ServeSim(small_spec())
+    base = sim.rank_compute_us(1, 0, 16.0)
+    assert sim.rank_compute_us(3, 0, 16.0) > base      # more decodes
+    assert sim.rank_compute_us(1, 1, 16.0) > base      # plus a prefill
+    assert sim.rank_compute_us(1, 0, 100.0) > base     # longer context
+
+
+def test_nonpow2_ranks_rejected():
+    with pytest.raises(ValueError, match="power of two"):
+        ServeSim(small_spec(nranks=6))
+
+
+# ---------------------------------------------- table vs per-step lane
+def test_table_matches_per_step_lane():
+    sim = ServeSim(small_spec())
+    tab = sim.build_table(mc=2, rng=0, check=4)
+    assert tab.us.shape == (len(tab.states), 2)
+    for state in tab.states[::3]:
+        for j in range(tab.mc):
+            batched = tab.us[tab.index[state], j]
+            single = sim.step_time_single(tab, state, j,
+                                          backend="interp")
+            assert abs(batched - single) <= 1e-9 * abs(single), \
+                f"lane disagreement at {state} draw {j}"
+
+
+def test_table_lookup_rotates_draws():
+    sim = ServeSim(small_spec())
+    tab = sim.build_table(mc=2, rng=0)
+    s = tab.states[0]
+    assert tab.lookup(*s, step=0) == tab.us[tab.index[s], 0]
+    assert tab.lookup(*s, step=3) == tab.us[tab.index[s], 1]
+
+
+# ------------------------------------------------------------- roofline
+def test_lm_serve_step_cost_sanity():
+    from repro.configs import get
+    from repro.roofline.analysis import lm_serve_step_cost
+    cfg = get("exanest-lm-100m")
+    c1 = lm_serve_step_cost(cfg, n_decode=1, decode_kv=64.0)
+    # one decode token costs at least 2 flops per parameter
+    assert c1["flops"] >= 2 * cfg.param_count()
+    # a batch of 8 shares the weight sweep: less than 8x the bytes
+    c8 = lm_serve_step_cost(cfg, n_decode=8, decode_kv=64.0)
+    assert c8["flops"] > c1["flops"]
+    assert c8["hbm_bytes"] < 8 * c1["hbm_bytes"]
+    # idle step costs nothing
+    c0 = lm_serve_step_cost(cfg, n_decode=0, decode_kv=0.0)
+    assert c0["flops"] == 0.0 and c0["hbm_bytes"] == 0.0
+    # prefill moves KV shards, decode does not
+    cp = lm_serve_step_cost(cfg, n_decode=0, decode_kv=0.0, n_prefill=32)
+    assert cp["kv_bytes"] > 0 and c1["kv_bytes"] == 0.0
+
+
+# ------------------------------------------------------------- traffic
+def test_replay_hand_computed_timeline():
+    wl = traffic.trace_workload([0.0, 0.0, 0.0], [64, 64, 64], [3, 3, 3])
+    res = traffic.replay(wl, slots=2, prefill_chunk=64, window=256,
+                         kv_bucket=lambda kv: 0,
+                         step_time=lambda nd, npf, kvb, i: 10.0)
+    # slots 2: r0,r1 prefill (step 1), decode x2 (steps 2-3) -> done @30;
+    # r2 admitted @30, prefill (step 4) -> first @40, done @60
+    assert res.admit_us.tolist() == [0.0, 0.0, 30.0]
+    assert res.first_us.tolist() == [10.0, 10.0, 40.0]
+    assert res.done_us.tolist() == [30.0, 30.0, 60.0]
+    assert res.n_steps == 6
+    assert res.tokens_out == 9
+
+
+def test_replay_idle_jumps_to_next_arrival():
+    wl = traffic.trace_workload([1000.0], [32], [2])
+    res = traffic.replay(wl, slots=2, prefill_chunk=32, window=64,
+                         kv_bucket=lambda kv: 0,
+                         step_time=lambda nd, npf, kvb, i: 5.0)
+    assert res.admit_us[0] == 1000.0
+    assert res.done_us[0] == 1010.0
+
+
+def test_replay_window_truncates():
+    wl = traffic.trace_workload([0.0], [8], [1000])
+    res = traffic.replay(wl, slots=1, prefill_chunk=8, window=16,
+                         kv_bucket=lambda kv: 0,
+                         step_time=lambda nd, npf, kvb, i: 1.0)
+    # prefill 8, then 8 decodes fill the window
+    assert res.tokens_out == 9          # 1 from prefill + 8 decodes
+    assert np.isfinite(res.done_us[0])
+
+
+def test_open_loop_overload_diverges():
+    wl_lo = traffic.poisson_workload(100.0, 60, 0, prompt_tokens=16,
+                                     out_tokens=8)
+    wl_hi = traffic.poisson_workload(10000.0, 60, 0, prompt_tokens=16,
+                                     out_tokens=8)
+    kw = dict(slots=2, prefill_chunk=16, window=64,
+              kv_bucket=lambda kv: 0,
+              step_time=lambda nd, npf, kvb, i: 100.0)
+    lo = traffic.replay(wl_lo, **kw)
+    hi = traffic.replay(wl_hi, **kw)
+    assert np.quantile(hi.latency_us, 0.99) > \
+        5 * np.quantile(lo.latency_us, 0.99)
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError, match="sorted"):
+        traffic.trace_workload([3.0, 1.0], [4, 4], [2, 2])
+    with pytest.raises(ValueError, match=">= 1"):
+        traffic.trace_workload([0.0], [0], [2])
+    with pytest.raises(ValueError, match="length"):
+        traffic.trace_workload([0.0], [4, 4], [2])
+
+
+def test_quantiles_and_cdf():
+    v = np.arange(1, 1001, dtype=float)
+    q = traffic.quantiles(v)
+    assert q["p50"] == pytest.approx(500.5)
+    assert q["p999"] == pytest.approx(999.001)
+    pts = traffic.cdf_points(v, 16)
+    fr = [p[1] for p in pts]
+    assert fr == sorted(fr) and fr[-1] == 1.0
+
+
+def test_knee_point():
+    assert traffic.knee_point([10, 20, 40], [10, 19.5, 25]) == 20.0
+    assert traffic.knee_point([10, 20], [5, 6]) is None
