@@ -1,27 +1,28 @@
-"""Population hillclimb over a parametric allreduce-schedule family,
-fitness-evaluated on the batched compiled substrate.
+"""Population hillclimb over the sigma-split butterfly family, on the
+first-class population-binding seam.
 
-This is the search seam ROADMAP item 2 (schedule synthesis) drives: the
-simulator as a fitness function.  The inner loop evaluates a *whole
-candidate population per call* — one genome-indexed schedule binds every
-candidate as a batch column of a single compiled replay
-(``ExanetMachine.cost_many``), so a generation costs one vectorized run
-instead of P interpreted simulations.
+This is the original ROADMAP item 2 search seam (PR 6), rebuilt on the
+round algebra: candidates are :class:`Split` terms from
+``core/exanet/schedule_algebra.py`` and a whole generation is costed as
+ONE batched compiled replay through
+:class:`~repro.core.exanet.schedule_algebra.SchedulePopulation` +
+:meth:`ExanetMachine.cost_population` — one batch column per genome,
+one lowered program per skeleton reused across generations.  (The old
+``ButterflyPopulation`` class that reinterpreted the ``nbytes`` protocol
+argument as a candidate index is gone; population binding is now an
+explicit type on the schedule/compile seam.)
 
-The searched family is a generalized xor-butterfly allreduce: at
-reduce-scatter step ``i`` (distance ``d = n/2^{i+1}``) each pair splits
-its working set by a genome fraction ``sigma_i`` — the lower rank keeps
-``(1-sigma_i)`` and receives its partner's copy of that part, the upper
-rank keeps ``sigma_i``.  The all-gather phase mirrors the splits back.
 ``sigma_i = 1/2`` everywhere *is* Rabenseifner's recursive halving; the
 hillclimb re-derives that balance point at bandwidth-bound sizes without
-being told, and is free to skew splits at latency-bound sizes where
-rounding and the 32 B eager boundary distort the trade.
+being told, and skews splits at latency-bound sizes where rounding and
+the 32 B eager boundary distort the trade.
 
-Every generation's best candidate is cross-checked against the
-interpreter to <=1e-9 relative — the agreement harness is the
-equivalence check that keeps synthesized schedules honest (the Exo
-pattern, see ROADMAP item 2).
+Every winner passes the two synthesis gates (``core/synth``): the
+contribution-tracking semantic check and the <=1e-9 interpreter
+agreement.  The *full* skeleton search (hierarchical/pipeline/
+dissemination combinators, winner cache, planner wiring) lives in
+``benchmarks/synth_sweep.py``; this benchmark keeps the single-family
+climb as the regression point for search throughput.
 
 Run:
   PYTHONPATH=src python benchmarks/hillclimb.py [--smoke] [--engine jax]
@@ -42,92 +43,24 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.exanet.schedules import (RabenseifnerAllreduce,  # noqa: E402
-                                         RecursiveDoublingAllreduce,
-                                         RingAllreduce, Round, Schedule)
+from repro.core.exanet.schedule_algebra import (SIGMA_HI,  # noqa: E402
+                                                SIGMA_LO, SchedulePopulation,
+                                                Split, TermSchedule)
 from repro.core.machine import ExanetMachine  # noqa: E402
+from repro.core.synth.search import AGREEMENT_RTOL  # noqa: E402
+from repro.core.synth.verify import check_term  # noqa: E402
 
 #: latency-bound, crossover, and bandwidth-bound points of the OSU grid
 NBYTES = (64, 4096, 262144)
-AGREEMENT_RTOL = 1e-9
-
-
-class ButterflyPopulation(Schedule):
-    """Genome-indexed butterfly-allreduce family.
-
-    The ``nbytes`` argument of the :class:`CollectiveSchedule` protocol
-    is reinterpreted as a *candidate index* into ``population`` — the
-    compiled executor then binds the whole population as columns of one
-    replay (``cost_many(sched, nranks, range(P))``), because the round
-    structure (xor pairs, exchange flags) is genome-invariant while the
-    per-send byte counts vary per column.
-
-    ``population`` is a (P, log2(nranks)) array of split fractions in
-    (0, 1); the payload is the constructor's ``nbytes``.
-    """
-
-    name = "allreduce_butterfly_population"
-
-    def __init__(self, nbytes: int, population: np.ndarray):
-        self.nbytes = int(nbytes)
-        self.population = np.asarray(population, dtype=np.float64)
-
-    # full-vector endpoint copies, like every software allreduce here
-    def pre_copy_bytes(self, idx: int) -> int:
-        return self.nbytes
-
-    def post_copy_bytes(self, idx: int) -> int:
-        return self.nbytes
-
-    def rounds(self, nranks: int, idx: int):
-        if nranks < 4 or nranks & (nranks - 1):
-            raise ValueError(f"butterfly family needs power-of-two "
-                             f"ranks >= 4, got {nranks}")
-        # modulo: structure probes (round_parallelism's _STRUCT_SIZE)
-        # may pass any index, and the structure is genome-invariant
-        g = self.population[int(idx) % len(self.population)]
-        steps = nranks.bit_length() - 1
-        if g.shape[0] != steps:
-            raise ValueError(f"genome length {g.shape[0]} != log2(nranks)"
-                             f"={steps}")
-        # per-rank working-set bytes; r and r^d share an identical split
-        # history (they differ only in bit log2(d)), so pair sets agree
-        w = np.full(nranks, float(self.nbytes))
-        step, d = 0, nranks // 2
-        for sigma in g:
-            sends, kept = [], np.empty(nranks)
-            for r in range(nranks):
-                p = r ^ d
-                # lower rank keeps (1-sigma): it sends its copy of the
-                # partner's sigma-share and receives the (1-sigma)-share
-                mine = (1.0 - sigma) if r < p else sigma
-                sends.append((r, p, max(1, int(round(w[r] * (1.0 - mine))))))
-                kept[r] = w[r] * mine
-            # the reduction each rank performs covers its kept share;
-            # Round carries one reduce_bytes, so charge the larger share
-            red = max(1, int(round(w.max() * max(sigma, 1.0 - sigma))))
-            yield Round(step, tuple(sends), exchange=True,
-                        reduce_bytes=red, label="reduce_scatter")
-            w = kept
-            step, d = step + 1, d // 2
-        d = 1
-        while d < nranks:
-            # all-gather mirror: everyone ships its whole owned segment
-            sends = tuple((r, r ^ d, max(1, int(round(w[r]))))
-                          for r in range(nranks))
-            yield Round(step, sends, exchange=True, label="all_gather")
-            w = w + w[np.arange(nranks) ^ d]
-            step, d = step + 1, d * 2
 
 
 def evaluate(machine: ExanetMachine, nbytes: int, nranks: int,
              population: np.ndarray, engine: str) -> np.ndarray:
-    """Fitness (simulated seconds) of every candidate — ONE batched
-    cost_many call, candidates as columns."""
-    fam = ButterflyPopulation(nbytes, population)
-    return np.asarray(machine.cost_many(fam, nranks,
-                                        range(len(population)),
-                                        engine=engine))
+    """Fitness (simulated seconds) of every candidate genome — ONE
+    batched cost_population call, candidates as columns."""
+    pop = SchedulePopulation(
+        [TermSchedule(Split(tuple(g))) for g in population], nbytes)
+    return np.asarray(machine.cost_population(pop, nranks, engine=engine))
 
 
 def hillclimb(machine: ExanetMachine, nbytes: int, nranks: int, *,
@@ -138,7 +71,8 @@ def hillclimb(machine: ExanetMachine, nbytes: int, nranks: int, *,
     # half uniform — the climb should rediscover balance on its own
     population = np.clip(np.concatenate([
         0.5 + 0.08 * rng.standard_normal((pop // 2, steps)),
-        rng.uniform(0.05, 0.95, (pop - pop // 2, steps))]), 0.02, 0.98)
+        rng.uniform(0.05, 0.95, (pop - pop // 2, steps))]),
+        SIGMA_LO, SIGMA_HI)
     best_g, best_s = None, np.inf
     evals = 0
     t0 = time.perf_counter()
@@ -155,25 +89,30 @@ def hillclimb(machine: ExanetMachine, nbytes: int, nranks: int, *,
         children = elite[rng.integers(0, len(elite), pop - len(elite))] \
             + scale * rng.standard_normal((pop - len(elite), steps))
         population = np.clip(np.concatenate([elite, children]),
-                             0.02, 0.98)
+                             SIGMA_LO, SIGMA_HI)
     wall = time.perf_counter() - t0
 
-    # equivalence check: the winning genome's batched latency must match
-    # the interpreter replaying the same schedule (<=1e-9 relative)
-    fam = ButterflyPopulation(nbytes, best_g[None, :])
+    # synthesis gates: semantic contribution check + the equivalence
+    # check (winner's batched latency == interpreter replay <=1e-9)
+    winner = Split(tuple(best_g))
+    check_term(winner, nranks)
+    sched = TermSchedule(winner)
     mpi = machine._mpi_for(nranks)
-    interp_s = mpi.run_schedule(fam, 0, nranks,
+    interp_s = mpi.run_schedule(sched, nbytes, nranks,
                                 backend="interp").latency_us * 1e-6
     rel = abs(best_s - interp_s) / max(abs(interp_s), 1e-30)
     assert rel <= AGREEMENT_RTOL, \
         f"winner disagrees with interpreter: {rel:.2e} rel"
 
+    from repro.core.exanet.schedules import (RabenseifnerAllreduce,
+                                             RecursiveDoublingAllreduce,
+                                             RingAllreduce)
     menu = {}
     for cls in (RecursiveDoublingAllreduce, RabenseifnerAllreduce,
                 RingAllreduce):
-        sched = cls()
-        menu[sched.name] = machine.cost_many(sched, nranks, [nbytes],
-                                             engine=engine)[0]
+        msched = cls()
+        menu[msched.name] = machine.cost_many(msched, nranks, [nbytes],
+                                              engine=engine)[0]
     best_menu = min(menu.values())
     return {
         "nbytes": nbytes, "nranks": nranks, "engine": engine,
@@ -182,7 +121,9 @@ def hillclimb(machine: ExanetMachine, nbytes: int, nranks: int, *,
         "candidates_per_sec": round(evals / wall, 1),
         "batched_calls": gens,
         "best_genome": [round(float(x), 4) for x in best_g],
+        "winner_name": sched.name,
         "best_s": best_s, "interp_agreement_rel": rel,
+        "semantic_ok": True,
         "menu_s": {k: round(v, 9) for k, v in menu.items()},
         "vs_best_menu": round(best_s / best_menu, 4),
     }

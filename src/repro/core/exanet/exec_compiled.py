@@ -535,9 +535,9 @@ class RoundProgram(VecTransport):
         return out
 
     # ----------------------------------------------------------------- bind
-    def _round_bytes(self, sched, size):
+    def _round_bytes(self, sched, size, cache=True):
         """Per-round byte data for one size, verifying the structure."""
-        cached = self._size_cache.get(size)
+        cached = self._size_cache.get(size) if cache else None
         if cached is not None:
             return cached
         per_round = []
@@ -571,7 +571,8 @@ class RoundProgram(VecTransport):
                 f"{self.schedule_name}: round count varies with size")
         data = (per_round, float(sched.pre_copy_bytes(size)),
                 float(sched.post_copy_bytes(size)))
-        self._size_cache[size] = data
+        if cache:
+            self._size_cache[size] = data
         return data
 
     def _copy_us(self, nb):
@@ -586,14 +587,19 @@ class RoundProgram(VecTransport):
                         3.0 * nb / p.a53_copy_bw_bytes_per_us
                         + p.a53_call_overhead_us, 0.0)
 
-    def bind(self, sched, sizes) -> _BoundProgram:
+    def bind(self, sched, sizes, cache=True) -> _BoundProgram:
         """Per-size byte counts, transport flags and endpoint copy costs
-        for a size grid; cached, so a repeated sweep only pays once."""
+        for a size grid; cached, so a repeated sweep only pays once.
+
+        ``cache=False`` bypasses both the bind and per-size byte caches:
+        population binding (DESIGN.md §2.8) reuses one lowered program
+        across search generations while the payload behind each member
+        *token* changes, so cached byte grids would be stale."""
         key = tuple(int(s) for s in sizes)
-        bound = self._bind_cache.get(key)
+        bound = self._bind_cache.get(key) if cache else None
         if bound is not None:
             return bound
-        per_size = [self._round_bytes(sched, s) for s in key]
+        per_size = [self._round_bytes(sched, s, cache) for s in key]
         p = self._p
         rounds = []
         for rid in range(len(self.rounds)):
@@ -727,7 +733,7 @@ class RoundProgram(VecTransport):
 
     def run(self, sched, sizes, *, state: ResourceState | None = None,
             t0: np.ndarray | None = None,
-            engine=None) -> BatchScheduleResult:
+            engine=None, cache_bind: bool = True) -> BatchScheduleResult:
         """Execute the program over a message-size grid in one batch.
 
         ``state``/``t0`` serve *embedded* execution inside a compiled
@@ -746,7 +752,7 @@ class RoundProgram(VecTransport):
         ``"jax"``, or an engine object; DESIGN.md §2.5).
         """
         self._eng = resolve_engine(engine)
-        bound = self.bind(sched, sizes)
+        bound = self.bind(sched, sizes, cache_bind)
         B = len(bound.sizes)
         p = self._p
         if state is None:

@@ -360,6 +360,25 @@ class ExanetMPI:
         prog = self.compiled_program(sched, nranks)
         return prog.run(sched, sizes, t0=t0, engine=engine)
 
+    def run_schedule_population(self, population, nranks: int, *,
+                                engine=None) -> BatchScheduleResult:
+        """Cost every member of a
+        :class:`~repro.core.exanet.schedule_algebra.SchedulePopulation`
+        as one batched compiled replay — the synthesis-search fitness
+        call (one column per candidate; DESIGN.md §2.8).
+
+        The lowered program is cached by the population's *skeleton*
+        (``program_key``), so successive generations of a search reuse
+        one compilation; binding always bypasses the byte caches
+        (``cache_bind=False``) because the member behind each batch
+        token changes between generations."""
+        if self.net.engine.tracing:
+            raise ValueError("compiled backend records no per-send trace; "
+                             "use backend='interp' (or trace=False)")
+        prog = self.compiled_program(population, nranks)
+        return prog.run(population, population.tokens(), engine=engine,
+                        cache_bind=False)
+
     # ------------------------------------------------------ program execution
     #: ``run_program(backend="auto")`` compiles at and above this rank
     #: count: per-iteration replay of a lowered Program beats the
@@ -383,9 +402,27 @@ class ExanetMPI:
             # non-allreduce ops have a single shipped schedule each
             name = plan.schedule if plan is not None else next(iter(algos))
         if name != "accel" and name not in algos:
+            if name.startswith("synth:"):
+                from repro.core.synth.search import registered
+                if registered(name) is not None:
+                    return name
             raise ValueError(f"unknown {op} algo {name!r}; options: "
                              f"{sorted(algos) + ['auto']}")
         return name
+
+    def _schedule_instance(self, op: str, name: str) -> CollectiveSchedule:
+        """Schedule object behind a resolved algorithm name: a menu class
+        instantiation, or the synthesized-schedule registry for
+        ``synth:<digest>`` names the planner's winner cache emits."""
+        if name.startswith("synth:"):
+            from repro.core.synth.search import registered
+            sched = registered(name)
+            if sched is None:
+                raise ValueError(
+                    f"synthesized schedule {name!r} is not registered "
+                    "(load its winner cache first)")
+            return sched
+        return COLLECTIVE_SCHEDULES[op][name]()
 
     def _program_hooks(self, nranks: int, plans: dict,
                        recorder=None) -> dict:
@@ -422,7 +459,7 @@ class ExanetMPI:
                 from repro.core.exanet.allreduce_accel import accel_cost_us
                 t = max(enters) + accel_cost_us(nbytes, n, self.p)
                 return [t] * n
-            res = self.run_schedule(COLLECTIVE_SCHEDULES[op][name](),
+            res = self.run_schedule(self._schedule_instance(op, name),
                                     nbytes, n, backend="interp",
                                     t0=list(enters), reset=False)
             shift = res.latency_us - max(res.clocks)
@@ -454,7 +491,7 @@ class ExanetMPI:
             if name == "accel":
                 continue
             if not self.compiled_profitable(
-                    COLLECTIVE_SCHEDULES[c.op][name](), prog.nranks):
+                    self._schedule_instance(c.op, name), prog.nranks):
                 return False
         return True
 
@@ -855,11 +892,16 @@ class ExanetMPI:
                 from repro.core.exanet.allreduce_accel import accel_cost_us
                 return accel_cost_us(size, nranks, self.p)
             algo = plan.schedule
-        sched_cls = ALLREDUCE_SCHEDULES.get(algo)
-        if sched_cls is None:
-            raise ValueError(f"unknown allreduce algo {algo!r}; "
-                             f"options: {sorted(ALLREDUCE_SCHEDULES) + ['auto']}")
-        return self.run_schedule(sched_cls(), size, nranks).latency_us
+        if algo.startswith("synth:"):
+            sched = self._schedule_instance("allreduce", algo)
+        else:
+            sched_cls = ALLREDUCE_SCHEDULES.get(algo)
+            if sched_cls is None:
+                raise ValueError(
+                    f"unknown allreduce algo {algo!r}; options: "
+                    f"{sorted(ALLREDUCE_SCHEDULES) + ['auto']}")
+            sched = sched_cls()
+        return self.run_schedule(sched, size, nranks).latency_us
 
     def allreduce_sw(self, size: int, nranks: int) -> float:
         """Recursive-doubling software allreduce (§6.1.3): per step an

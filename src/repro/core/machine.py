@@ -176,6 +176,9 @@ class TpuMachine:
 
     name: ClassVar[str] = "tpu-v5e"
     levels: ClassVar[tuple[str, ...]] = (INTRA, INTER)
+    #: rank-placement key for the synthesized-schedule winner cache
+    #: (DESIGN.md §2.8): the mesh has one placement
+    placement: ClassVar[str] = "mesh"
 
     def alpha_beta(self, level: str = INTRA) -> tuple[float, float]:
         if level == INTER:
@@ -207,6 +210,19 @@ class TpuMachine:
         nothing to select here)."""
         return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
                             level=level) for s in sizes]
+
+    def cost_population(self, population, nranks: int, *,
+                        fidelity: str = "analytic",
+                        level: str | None = None,
+                        engine=None) -> list[float]:
+        """Per-member cost of a
+        :class:`~repro.core.exanet.schedule_algebra.SchedulePopulation`.
+        Closed forms share no work across members, so this is the plain
+        loop (the uniform search-facing surface; simulated machines
+        batch it)."""
+        return [self.cost_s(m, nranks, population.nbytes,
+                            fidelity=fidelity, level=level)
+                for m in population.members]
 
     def cost_program(self, prog, *, fidelity: str = "analytic",
                      level: str | None = None,
@@ -265,6 +281,12 @@ class ExanetMachine:
         self.params = mpi.p
         self._ab_cache: dict[str, tuple[float, float]] = {}
         self._tiers: dict[int, object] = {}
+
+    @property
+    def placement(self) -> str:
+        """Rank-placement key for the synthesized-schedule winner cache:
+        QFDB-major 1/MPSoC (the §4.7 placement) vs block-packed cores."""
+        return "mpsoc" if self.mpi._rpm == 1 else "block"
 
     def _mpi_for(self, nranks: int):
         """The simulation instance that fits ``nranks``: the calibrated
@@ -364,6 +386,38 @@ class ExanetMachine:
             # interpret per size
             return [self.cost_s(schedule, nranks, s, fidelity=fidelity,
                                 level=level) for s in sizes]
+        return [float(us) * 1e-6 for us in res.latency_us]
+
+    def cost_population(self, population, nranks: int, *,
+                        fidelity: str = "sim", level: str | None = None,
+                        engine=None) -> list[float]:
+        """Per-member simulated cost of a
+        :class:`~repro.core.exanet.schedule_algebra.SchedulePopulation`
+        in ONE batched compiled replay (one batch column per member, one
+        lowered program per skeleton x rank count) — the synthesis
+        search's fitness call.  Populations whose skeleton the array
+        executor cannot amortize fall back to interpreting each member,
+        same gate as :meth:`cost_many`."""
+        n_members = len(population)
+        if nranks < 2 or not n_members:
+            return [0.0] * n_members
+        if fidelity != "sim":
+            alpha, bw = self.alpha_beta(level
+                                        or self._default_level(nranks))
+            return [alpha_beta_cost_s(m, nranks, population.nbytes,
+                                      alpha_s=alpha, bw_bytes_per_s=bw)
+                    for m in population.members]
+        from repro.core.exanet.exec_compiled import ProgramStructureError
+        mpi = self._mpi_for(nranks)
+        try:
+            if not mpi.compiled_profitable(population, nranks):
+                raise ProgramStructureError("serial-chain population")
+            res = mpi.run_schedule_population(population, nranks,
+                                              engine=engine)
+        except (ProgramStructureError, ValueError):
+            return [mpi.run_schedule(m, population.nbytes,
+                                     nranks).latency_us * 1e-6
+                    for m in population.members]
         return [float(us) * 1e-6 for us in res.latency_us]
 
     def cost_program(self, prog, *, fidelity: str = "sim",

@@ -86,6 +86,13 @@ class Plan:
     costs: tuple[tuple[str, float], ...]  # every feasible candidate
     fidelity: str
     machine: str
+    #: candidate source of the winner: ``"menu"`` (hand-written schedule
+    #: or the §4.7 accelerator) or ``"synthesized"`` (winner-cache term)
+    provenance: str = "menu"
+    #: fractional cost advantage of the winner over the best candidate
+    #: from the *other* source (0.0 when only one source was feasible):
+    #: how much the synthesis search actually buys (or forgoes) here
+    margin: float = 0.0
 
     def cost_of(self, name: str) -> float | None:
         for k, v in self.costs:
@@ -111,24 +118,81 @@ class CollectivePlanner:
     """Cost-driven collective schedule selection on one machine model."""
 
     def __init__(self, machine: MachineModel, *, fidelity: str = "analytic",
-                 engine=None):
+                 engine=None, synth_cache="default"):
         """``engine`` — scan backend forwarded to the machine's batched
         ``sim``-fidelity costing (:meth:`plan_many`; ``"numpy"`` default |
         ``"jax"``, DESIGN.md §2.5).  Plans are engine-independent (the
-        engines agree to 1e-9), so the cache never keys on it."""
+        engines agree to 1e-9), so the cache never keys on it.
+
+        ``synth_cache`` — the synthesized-schedule candidate source
+        (DESIGN.md §2.8): ``"default"`` loads the committed
+        ``core/synth/winners.json`` artifact, ``None`` disables
+        synthesized candidates, a path or
+        :class:`repro.core.synth.search.WinnerCache` uses that cache.
+        Cached winners whose ``(machine, op, nranks, size-bucket,
+        placement)`` key matches a query are costed alongside the menu —
+        never trusted blindly — so ``allreduce(algo="auto")`` and
+        ``grad_sync(strategy="auto")`` pick them up only where they
+        actually win at this machine's fidelity."""
         self.machine = machine
         self.fidelity = fidelity
         self.engine = engine
+        self._synth_cache_arg = synth_cache
+        self._synth_cache = None if synth_cache is None else "unresolved"
         self._cache: dict[tuple, Plan] = {}
         self._hits = 0
         self._misses = 0
+        self._synth_candidates = 0
+        self._synth_wins = 0
 
     # ------------------------------------------------------------- caching
     def cache_info(self) -> dict:
         total = self._hits + self._misses
         return {"hits": self._hits, "misses": self._misses,
                 "size": len(self._cache),
-                "hit_rate": self._hits / total if total else 0.0}
+                "hit_rate": self._hits / total if total else 0.0,
+                "synth_candidates": self._synth_candidates,
+                "synth_wins": self._synth_wins}
+
+    # --------------------------------------------- synthesized candidates
+    def _winner_cache(self):
+        if self._synth_cache == "unresolved":
+            from repro.core.synth.search import resolve_cache
+            self._synth_cache = resolve_cache(self._synth_cache_arg)
+        return self._synth_cache
+
+    def _synth_candidate(self, op: str, p: int, nbytes: int):
+        """(name, schedule) of the cached synthesized winner matching
+        this query's cell, or None.  Counts lookups that produced a
+        candidate (``cache_info()["synth_candidates"]``)."""
+        cache = self._winner_cache()
+        if cache is None:
+            return None
+        entry = cache.get(self.machine.name, op, p, nbytes,
+                          getattr(self.machine, "placement", "default"))
+        if entry is None:
+            return None
+        sched = cache.schedule(entry)
+        if not self.machine.supports(sched, p, nbytes):
+            return None
+        self._synth_candidates += 1
+        return sched.name, sched
+
+    def resolve_schedule(self, plan: Plan):
+        """The executable schedule object behind a plan's chosen key
+        (menu class instance, accelerator schedule, or the registered
+        synthesized term)."""
+        if plan.schedule.startswith("synth:"):
+            from repro.core.synth.search import registered
+            sched = registered(plan.schedule)
+            if sched is None:
+                raise ValueError(f"synthesized schedule {plan.schedule!r} "
+                                 "is not registered")
+            return sched
+        for name, factory in ALLREDUCE_CANDIDATES:
+            if name == plan.schedule:
+                return factory()
+        raise ValueError(f"no schedule object for {plan.schedule!r}")
 
     # ------------------------------------------------------------ planning
     def plan(self, op: str, nbytes: int, participants: tuple[int, ...] | int,
@@ -206,6 +270,18 @@ class CollectivePlanner:
                                                       fidelity=fidelity,
                                                       engine=self.engine)):
                     costs_by_size[s].append((name, c))
+            # synthesized candidates: one winner-cache entry per size
+            # bucket, batched per distinct schedule like the menu
+            by_sched: dict[str, tuple] = {}
+            for s in missing:
+                syn = self._synth_candidate("allreduce", p, s)
+                if syn is not None:
+                    by_sched.setdefault(syn[0], (syn[1], []))[1].append(s)
+            for name, (sched, ss) in by_sched.items():
+                for s, c in zip(ss, m.cost_many(sched, p, ss,
+                                                fidelity=fidelity,
+                                                engine=self.engine)):
+                    costs_by_size[s].append((name, c))
             for s in missing:
                 key = (op, s, participants, fidelity, allow_lossy)
                 self._cache[key] = self._pick("allreduce", s, participants,
@@ -255,8 +331,16 @@ class CollectivePlanner:
         for name, c in costs[1:]:
             if c < best_cost:
                 best, best_cost = name, c
+        synth_won = best.startswith("synth:")
+        other = [c for name, c in costs
+                 if name.startswith("synth:") != synth_won]
+        margin = (min(other) - best_cost) / min(other) if other else 0.0
+        if synth_won:
+            self._synth_wins += 1
         return Plan(op, nbytes, participants, best, best_cost,
-                    tuple(costs), fidelity, self.machine.name)
+                    tuple(costs), fidelity, self.machine.name,
+                    provenance="synthesized" if synth_won else "menu",
+                    margin=margin)
 
     def _plan_allreduce(self, nbytes: int, participants: tuple[int, ...],
                         fidelity: str) -> Plan:
@@ -267,6 +351,11 @@ class CollectivePlanner:
             sched = factory()
             if not m.supports(sched, p, nbytes):
                 continue
+            costs.append((name, m.cost_s(sched, p, nbytes,
+                                         fidelity=fidelity)))
+        syn = self._synth_candidate("allreduce", p, nbytes)
+        if syn is not None:
+            name, sched = syn
             costs.append((name, m.cost_s(sched, p, nbytes,
                                          fidelity=fidelity)))
         return self._pick("allreduce", nbytes, participants, costs, fidelity)
@@ -285,6 +374,13 @@ class CollectivePlanner:
             if not m.supports(sched, p, nbytes):
                 continue
             c = m.cost_s(sched, p, nbytes, fidelity=fidelity, level=level)
+            if best is None or c < best:
+                best = c
+        syn = self._synth_candidate("allreduce", p, nbytes)
+        if syn is not None and syn[0] not in exclude:
+            # synthesized winners are software schedules: grad_sync's
+            # strategy costing benefits from them transparently
+            c = m.cost_s(syn[1], p, nbytes, fidelity=fidelity, level=level)
             if best is None or c < best:
                 best = c
         if best is None:

@@ -1,0 +1,4 @@
+"""Collective-schedule synthesis: semantic verification
+(:mod:`repro.core.synth.verify`), population search + winner cache
+(:mod:`repro.core.synth.search`) over the round algebra of
+:mod:`repro.core.exanet.schedule_algebra`."""

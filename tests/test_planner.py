@@ -62,16 +62,36 @@ def _true_costs_us(mpi, size, nranks):
     return sw, hw
 
 
+def _synth_truth_us(mpi, planner, size, nranks):
+    """Simulated truth of the cached synthesized candidate (DESIGN.md
+    §2.8), through the same allreduce wrapper — None when the committed
+    winner cache has no entry for this cell."""
+    from repro.core.synth.search import WinnerCache
+    machine = planner.machine
+    entry = WinnerCache.default().get(machine.name, "allreduce", nranks,
+                                      size, machine.placement)
+    if entry is None:
+        return None
+    return mpi.allreduce(size, nranks, WinnerCache.default()
+                         .schedule(entry).name)
+
+
 @pytest.mark.parametrize("nranks", [64, 128])
 def test_planner_choice_matches_simulated_truth(mpi, exa_planner, nranks):
     """At every size the plan is the argmin of the event-simulated software
-    cost vs the calibrated accelerator cost — selection is cost, not a
-    threshold."""
+    cost vs the calibrated accelerator cost (vs the cached synthesized
+    term where one exists) — selection is cost, not a threshold."""
     for size in (256, 1024, 4096, 8192, 16384, 65536):
         plan = exa_planner.plan("allreduce", size, (nranks,))
         sw, hw = _true_costs_us(mpi, size, nranks)
-        assert (plan.schedule == "accel") == (hw < sw), (size, plan, sw, hw)
-        assert plan.cost_s * 1e6 == pytest.approx(min(sw, hw), rel=1e-9)
+        syn = _synth_truth_us(mpi, exa_planner, size, nranks)
+        truth = min(sw, hw) if syn is None else min(sw, hw, syn)
+        accel_wins = hw < sw and (syn is None or hw < syn)
+        assert (plan.schedule == "accel") == accel_wins, \
+            (size, plan, sw, hw, syn)
+        synth_wins = syn is not None and syn < min(sw, hw)
+        assert plan.provenance == ("synthesized" if synth_wins else "menu")
+        assert plan.cost_s * 1e6 == pytest.approx(truth, rel=1e-9)
 
 
 @pytest.mark.parametrize("nranks", [64, 128])

@@ -1,0 +1,277 @@
+"""Round algebra + synthesis tests (ISSUE 8).
+
+Three layers, matching the acceptance criteria:
+
+* **sampled properties** — randomly generated algebra terms lower to a
+  semantically correct allreduce (contribution-tracking check) and
+  agree interp-vs-compiled to <=1e-9; deterministic seeded sampling so
+  the gates always run (the hypothesis twins — unbounded generators —
+  live in ``test_schedule_algebra_property.py`` behind the repo's usual
+  ``importorskip``);
+* **regression** — the balanced ``sigma = 1/2`` Split reproduces
+  ``RabenseifnerAllreduce``'s round stream *exactly*, byte for byte;
+* **wiring** — population binding, the winner cache, and the planner's
+  ``synthesized`` candidate source (provenance, margin, counters,
+  ``algo="synth:..."`` dispatch), plus the semantic gate over every
+  hand-written menu schedule the planner can emit.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.exanet import ExanetMPI
+from repro.core.exanet.schedule_algebra import (AXIS_GROUPS, SIGMA_HI,
+                                                SIGMA_LO, Dissemination,
+                                                Hierarchical, Pipeline,
+                                                SchedulePopulation, Split,
+                                                TermSchedule, term_from_spec)
+from repro.core.exanet.schedules import RabenseifnerAllreduce
+from repro.core.machine import ExanetMachine
+from repro.core.planner import ALLREDUCE_CANDIDATES, CollectivePlanner
+from repro.core.synth.search import (AGREEMENT_RTOL, WinnerCache, register_term,
+                                     search_cell, size_bucket, skeletons)
+from repro.core.synth.verify import (SemanticCheckError, check_allreduce,
+                                     check_term, contribution_check)
+
+# ------------------------------------------------------- term sampling
+def sample_term(rng, max_ranks=64):
+    """(term, nranks): a random combinator tree over a feasible scope —
+    the seeded twin of the hypothesis strategy in
+    ``test_schedule_algebra_property.py``."""
+    if rng.random() < 0.5:
+        k = int(rng.integers(1, 5))
+        term, n = Split(tuple(np.clip(rng.uniform(0.05, 0.95, k),
+                                      SIGMA_LO, SIGMA_HI))), 1 << k
+    else:
+        radix = int(rng.integers(2, 4))
+        m = int(rng.integers(1, 4))
+        term, n = Dissemination(radix), radix ** m
+    if rng.random() < 0.5:
+        term = Pipeline(int(rng.integers(2, 4)), term)
+    if rng.random() < 0.5:
+        group = int(rng.choice([2, 4]))
+        if n >= 2 and n * group <= max_ranks:
+            term, n = Hierarchical(group, term), n * group
+    if n > max_ranks:
+        return sample_term(rng, max_ranks)
+    return term, n
+
+
+SAMPLED_TERMS = [sample_term(np.random.default_rng(seed))
+                 for seed in range(25)]
+
+
+# ------------------------------------------------------------- properties
+@pytest.mark.parametrize("tn", SAMPLED_TERMS,
+                         ids=lambda tn: f"{tn[0].spec()[0]}-p{tn[1]}")
+def test_random_terms_are_semantically_correct(tn):
+    """Gate 1 for the whole search space: any term the generator can
+    produce implements an exact-once allreduce."""
+    term, nranks = tn
+    check_term(term, nranks)
+    widths = term.atom_widths(nranks)
+    assert widths.shape == (term.n_atoms(nranks),)
+    assert np.isclose(widths.sum(), 1.0)
+    assert (widths > 0).all()
+
+
+@pytest.mark.parametrize("tn", SAMPLED_TERMS[:12],
+                         ids=lambda tn: f"{tn[0].spec()[0]}-p{tn[1]}")
+def test_genome_and_spec_roundtrip(tn):
+    term, nranks = tn
+    g = term.genome()
+    again = term.with_genome(g)
+    assert again.spec() == term.spec()
+    assert again.structure_key() == term.structure_key()
+    rebuilt = term_from_spec(json.loads(json.dumps(term.spec())))
+    assert rebuilt.structure_key() == term.structure_key()
+    assert TermSchedule(rebuilt).name == TermSchedule(term).name
+
+
+@pytest.mark.parametrize("tn", [t for t in SAMPLED_TERMS if t[1] <= 32][:10],
+                         ids=lambda tn: f"{tn[0].spec()[0]}-p{tn[1]}")
+@pytest.mark.parametrize("nbytes", [64, 65536])
+def test_random_terms_agree_interp_vs_compiled(tn, nbytes):
+    """Gate 2 for the whole search space: the compiled replay of any
+    term matches the event interpreter to <=1e-9."""
+    term, nranks = tn
+    sched = TermSchedule(term)
+    mpi = ExanetMPI()
+    interp = mpi.run_schedule(sched, nbytes, nranks,
+                              backend="interp").latency_us
+    compiled = mpi.run_schedule(sched, nbytes, nranks,
+                                backend="compiled").latency_us
+    rel = abs(interp - compiled) / max(abs(interp), 1e-30)
+    assert rel <= AGREEMENT_RTOL
+
+
+def test_contribution_check_catches_broken_schedules():
+    """Negative control: dropping one send from a correct lowering must
+    fail the gate (the checker is not vacuously green)."""
+    term = Split.balanced(8)
+    rounds = term.data_rounds(8)
+    broken = list(rounds)
+    broken[-1] = broken[-1].__class__(
+        broken[-1].step, broken[-1].sends[1:], broken[-1].exchange,
+        broken[-1].label)
+    with pytest.raises(SemanticCheckError):
+        contribution_check(broken, 8, term.n_atoms(8), label="broken")
+
+
+# ------------------------------------------------------------- regression
+@pytest.mark.parametrize("nranks", [4, 8, 16, 64])
+@pytest.mark.parametrize("nbytes", [64, 1000, 4096, 262144])
+def test_balanced_split_is_rabenseifner_exactly(nranks, nbytes):
+    """sigma = 1/2 everywhere IS Rabenseifner: identical Round streams,
+    byte for byte, including the integer-floor chunk arithmetic."""
+    synth = list(TermSchedule(Split.balanced(nranks)).rounds(nranks, nbytes))
+    menu = list(RabenseifnerAllreduce().rounds(nranks, nbytes))
+    assert len(synth) == len(menu)
+    for s, m in zip(synth, menu):
+        assert s.sends == m.sends
+        assert s.exchange == m.exchange
+        assert s.reduce_bytes == m.reduce_bytes
+
+
+@pytest.mark.parametrize("nranks", [8, 12, 16, 64])
+@pytest.mark.parametrize("name", [n for n, _ in ALLREDUCE_CANDIDATES])
+def test_every_menu_schedule_passes_semantic_check(nranks, name):
+    """Acceptance: every schedule the planner can emit has a verified
+    exact-once dataflow (menu twins live in verify.MENU_SEMANTICS)."""
+    machine = ExanetMachine()
+    factory = dict(ALLREDUCE_CANDIDATES)[name]
+    if not machine.supports(factory(), nranks, 4096):
+        pytest.skip(f"{name} infeasible at {nranks} ranks")
+    check_allreduce(name, nranks)
+
+
+def test_skeletons_are_feasible_and_unique():
+    for nranks in (8, 16, 64, 256):
+        terms_ = skeletons(nranks)
+        assert terms_, f"no skeletons at {nranks}"
+        keys = [t.structure_key() for t in terms_]
+        assert len(keys) == len(set(keys))
+        for t in terms_:
+            check_term(t, nranks)
+
+
+# ------------------------------------------------------ population binding
+def test_population_batched_costs_match_interp():
+    """One batched compiled replay per generation == per-member event
+    interpretation, to 1e-9 (the first-class ButterflyPopulation
+    replacement)."""
+    nranks, nbytes = 16, 4096
+    rng = np.random.default_rng(0)
+    members = [TermSchedule(Split(tuple(g)))
+               for g in np.clip(rng.uniform(0.2, 0.8, (6, 4)),
+                                SIGMA_LO, SIGMA_HI)]
+    pop = SchedulePopulation(members, nbytes)
+    machine = ExanetMachine()
+    batched = np.asarray(machine.cost_population(pop, nranks))
+    mpi = machine._mpi_for(nranks)
+    for m, c in zip(members, batched):
+        interp = mpi.run_schedule(m, nbytes, nranks,
+                                  backend="interp").latency_us * 1e-6
+        assert abs(c - interp) / interp <= AGREEMENT_RTOL
+
+
+def test_population_rejects_mixed_skeletons():
+    with pytest.raises(ValueError, match="skeleton"):
+        SchedulePopulation([TermSchedule(Split.balanced(8)),
+                            TermSchedule(Dissemination(2))], 4096)
+
+
+# ---------------------------------------------------------- search + gates
+def test_search_cell_winner_passes_both_gates():
+    """The CI-sized search: the returned winner has already cleared the
+    semantic check and the 1e-9 interpreter-agreement gate (search_cell
+    raises otherwise), and beats or ties the best software menu."""
+    machine = ExanetMachine()
+    res = search_cell(machine, 65536, 16, pop=6, gens=2, refine=1, seed=0)
+    assert res.semantic_ok
+    assert res.agreement_rel <= AGREEMENT_RTOL
+    assert res.winner_s <= res.best_sw_menu_s * 1.001
+    check_term(term_from_spec(res.winner_spec), 16)
+
+
+# ------------------------------------------------------------ winner cache
+def _seed_cache(machine, nranks=16, nbytes=65536):
+    """A cache holding one genuine searched winner for the machine."""
+    res = search_cell(machine, nbytes, nranks, pop=6, gens=2, refine=1,
+                      seed=0)
+    cache = WinnerCache()
+    cache.put(machine.name, "allreduce", nranks, nbytes, res.placement,
+              spec=res.winner_spec, cost_s=res.winner_s,
+              best_menu_s=res.best_sw_menu_s, menu_name=res.best_sw_menu)
+    return cache, res
+
+
+def test_winner_cache_roundtrip(tmp_path):
+    machine = ExanetMachine()
+    cache, res = _seed_cache(machine)
+    path = str(tmp_path / "winners.json")
+    cache.save(path)
+    again = WinnerCache.load(path)
+    assert len(again) == len(cache) == 1
+    entry = again.get(machine.name, "allreduce", 16, 65536, res.placement)
+    assert entry is not None and entry["spec"] == res.winner_spec
+    # bucket key: any size in [bucket, 2*bucket) resolves the same entry
+    b = size_bucket(65536)
+    assert again.get(machine.name, "allreduce", 16, 2 * b - 1,
+                     res.placement) == entry
+    assert again.get(machine.name, "allreduce", 16, 2 * b,
+                     res.placement) is None
+    sched = again.schedule(entry)
+    assert sched.name == res.winner_name
+
+
+# ---------------------------------------------------------- planner wiring
+def test_planner_synth_candidate_provenance_margin_counters():
+    machine = ExanetMachine()
+    cache, res = _seed_cache(machine)
+    planner = CollectivePlanner(machine, fidelity="sim", synth_cache=cache)
+    plan = planner.plan("allreduce", 65536, 16)
+    # the searched winner beat the sw menu; at 64 KiB accel has lost the
+    # Fig. 19 crossover too, so the synthesized schedule must be chosen
+    assert plan.schedule == res.winner_name
+    assert plan.provenance == "synthesized"
+    best_menu = min(c for n, c in plan.costs if not n.startswith("synth:"))
+    assert plan.margin == pytest.approx(
+        (best_menu - plan.cost_s) / best_menu)
+    assert plan.margin > 0
+    info = planner.cache_info()
+    assert info["synth_candidates"] == 1 and info["synth_wins"] == 1
+    # menu-only query: provenance stays "menu", no synth counters move
+    plan2 = planner.plan("allreduce", 64, 16)
+    assert plan2.provenance == "menu"
+    assert planner.cache_info()["synth_candidates"] == 1
+    # resolve_schedule returns the registered executable term
+    sched = planner.resolve_schedule(plan)
+    assert sched.name == plan.schedule
+    # plan_many batch path lands on the identical plan
+    planner2 = CollectivePlanner(machine, fidelity="sim", synth_cache=cache)
+    [plan_b] = planner2.plan_many("allreduce", [65536], 16)
+    assert (plan_b.schedule, plan_b.cost_s) == (plan.schedule, plan.cost_s)
+
+
+def test_planner_disabled_synth_cache_is_menu_only():
+    machine = ExanetMachine()
+    planner = CollectivePlanner(machine, fidelity="sim", synth_cache=None)
+    plan = planner.plan("allreduce", 65536, 16)
+    assert plan.provenance == "menu"
+    assert not any(n.startswith("synth:") for n, _ in plan.costs)
+
+
+def test_mpi_allreduce_dispatches_synthesized_name():
+    """``allreduce(algo="synth:<digest>")`` executes the registered term
+    end to end — the transparent-benefit seam for serve/app simulators."""
+    machine = ExanetMachine()
+    sched = register_term(Split.balanced(16))
+    mpi = machine._mpi_for(16)
+    got = mpi.allreduce(4096, 16, algo=sched.name)
+    via_menu = mpi.allreduce(4096, 16, algo="rabenseifner")
+    assert got == pytest.approx(via_menu, rel=1e-9)
+    with pytest.raises(Exception):
+        mpi.allreduce(4096, 16, algo="synth:0000000000")

@@ -1,0 +1,87 @@
+"""Hypothesis property tests for the round algebra (ISSUE 8).
+
+Unbounded-generator twins of the seeded sampling tests in
+``test_schedule_algebra.py``: *any* term the strategy can produce must
+(a) implement an exact-once allreduce under the contribution-tracking
+check and (b) agree interp-vs-compiled to <=1e-9.  Skipped (like
+``test_property.py``) when hypothesis is not installed; the seeded
+versions keep the gates enforced regardless.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exanet import ExanetMPI
+from repro.core.exanet.schedule_algebra import (SIGMA_HI, SIGMA_LO,
+                                                Dissemination, Hierarchical,
+                                                Pipeline, Split, TermSchedule,
+                                                term_from_spec)
+from repro.core.synth.search import AGREEMENT_RTOL
+from repro.core.synth.verify import check_term
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def sigmas(k):
+    return st.tuples(*[st.floats(SIGMA_LO, SIGMA_HI, allow_nan=False)
+                       for _ in range(k)])
+
+
+@st.composite
+def terms(draw, max_ranks=64):
+    """(term, nranks): a random combinator tree over a feasible scope."""
+    base_kind = draw(st.sampled_from(["split", "dissem"]))
+    if base_kind == "split":
+        k = draw(st.integers(1, 4))
+        term, n = Split(draw(sigmas(k))), 1 << k
+    else:
+        radix = draw(st.integers(2, 3))
+        m = draw(st.integers(1, 3))
+        term, n = Dissemination(radix), radix ** m
+    if draw(st.booleans()):
+        term = Pipeline(draw(st.integers(2, 3)), term)
+    if draw(st.booleans()):
+        group = draw(st.sampled_from([2, 4]))
+        if n >= 2 and n * group <= max_ranks:
+            term, n = Hierarchical(group, term), n * group
+    hypothesis.assume(n <= max_ranks)
+    return term, n
+
+
+@given(terms())
+def test_random_terms_are_semantically_correct(tn):
+    term, nranks = tn
+    check_term(term, nranks)
+    widths = term.atom_widths(nranks)
+    assert widths.shape == (term.n_atoms(nranks),)
+    assert np.isclose(widths.sum(), 1.0)
+    assert (widths > 0).all()
+
+
+@given(terms())
+def test_genome_and_spec_roundtrip(tn):
+    term, nranks = tn
+    again = term.with_genome(term.genome())
+    assert again.spec() == term.spec()
+    rebuilt = term_from_spec(json.loads(json.dumps(term.spec())))
+    assert rebuilt.structure_key() == term.structure_key()
+    assert TermSchedule(rebuilt).name == TermSchedule(term).name
+
+
+@given(terms(max_ranks=32), st.sampled_from([64, 4096, 65536]))
+@settings(max_examples=15, deadline=None)
+def test_random_terms_agree_interp_vs_compiled(tn, nbytes):
+    term, nranks = tn
+    sched = TermSchedule(term)
+    mpi = ExanetMPI()
+    interp = mpi.run_schedule(sched, nbytes, nranks,
+                              backend="interp").latency_us
+    compiled = mpi.run_schedule(sched, nbytes, nranks,
+                                backend="compiled").latency_us
+    assert abs(interp - compiled) / max(abs(interp), 1e-30) <= AGREEMENT_RTOL
