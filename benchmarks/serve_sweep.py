@@ -249,6 +249,67 @@ def strip_private(swept: dict) -> dict:
     return {k: v for k, v in swept.items() if not k.startswith("_")}
 
 
+#: nominal host execution rates for the calibration row's roofline
+#: prediction — the *ratio* is the anchor, not an absolute claim
+HOST_RATE_GFLOPS = 10.0
+HOST_BW_GBPS = 10.0
+
+
+def calibration_row(arch: str = "exanest-lm-100m", *, requests: int = 4,
+                    slots: int = 2, window: int = 64, max_new: int = 4,
+                    prompt_len: int = 5) -> dict:
+    """Measured-vs-predicted anchor (DESIGN.md §6): run the REAL
+    slot-based engine (the ``launch/serve.py`` path — jax forward passes,
+    wall clock) on a reduced config, take measured wall time per engine
+    step, and fold it back onto :func:`repro.roofline.analysis.
+    lm_serve_step_cost` via ``serve_step_calibration``.  The recorded
+    ``measured_over_predicted`` ratio is the single constant that maps
+    the closed form onto this host.  Skipped (with reason) where jax or
+    a model backend is unavailable — the simulated sweep above never
+    depends on it."""
+    try:
+        import jax
+        from repro.config import reduced
+        from repro.configs import get
+        from repro.models import build_model
+        from repro.roofline.analysis import serve_step_calibration
+        from repro.serve.engine import ServeEngine
+    except ImportError as e:                        # pragma: no cover
+        return {"arch": arch, "skipped": f"import: {e}"}
+    cfg = reduced(get(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=slots, window=window)
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(list(rng.integers(0, cfg.vocab_size,
+                                         size=prompt_len)),
+                       max_new_tokens=max_new) for _ in range(requests)]
+    eng.step()                     # compile outside the measured window
+    t0 = time.perf_counter()
+    steps = 1 + eng.run_until_idle(max_steps=2000)
+    dt = time.perf_counter() - t0
+    stats = eng.request_steps()
+    # mean occupied decode slots over the run: request-steps / engine steps
+    busy = sum(d - s for s, d in stats.values())
+    n_decode = max(1.0, busy / max(steps, 1))
+    cal = serve_step_calibration(
+        cfg, measured_step_us=dt / max(steps, 1) * 1e6,
+        n_decode=n_decode, decode_kv=prompt_len + max_new / 2,
+        rate_flops_per_us=HOST_RATE_GFLOPS * 1e3,
+        bw_bytes_per_us=HOST_BW_GBPS * 1e3)
+    cal.update({"arch": arch, "reduced": True, "engine_steps": steps,
+                "requests": len(rids), "wall_s": round(dt, 4),
+                "mean_decode_slots": round(n_decode, 3),
+                "host_rate_gflops": HOST_RATE_GFLOPS,
+                "host_bw_gbps": HOST_BW_GBPS})
+    print(f"calibration {arch} (reduced): measured "
+          f"{cal['measured_step_us']:.0f} us/step vs predicted "
+          f"{cal['predicted_step_us']:.0f} us/step -> "
+          f"ratio {cal['measured_over_predicted']:.2f} "
+          f"({steps} steps, {dt:.2f}s)")
+    return cal
+
+
 def main(out_path: str = "BENCH_serve.json", smoke: bool = False,
          engine: str = "numpy", arch: str = "deepseek-7b") -> None:
     out: dict = {"engine": engine, "agreement_rtol": AGREEMENT_RTOL,
@@ -268,6 +329,7 @@ def main(out_path: str = "BENCH_serve.json", smoke: bool = False,
         out["tables"]["16"] = sw["table"]
         out["speedup"] = [speedup_row(sw, engine=engine,
                                       per_step_steps=10)]
+        out["calibration"] = calibration_row()
     else:
         out["ranks"] = list(RANKS)
         out["prediction_ranks"] = list(PREDICT_RANKS)
@@ -307,6 +369,7 @@ def main(out_path: str = "BENCH_serve.json", smoke: bool = False,
                 "prediction": True}
             out["tables"][str(n)] = sw["table"]
         out["speedup"] = speedups
+        out["calibration"] = calibration_row()
         # acceptance keys: full sweeps only (see module docstring)
         out["scenario_speedup_at_512"] = min(
             s["scenario_speedup"] for s in speedups)

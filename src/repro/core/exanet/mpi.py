@@ -700,7 +700,9 @@ class ExanetMPI:
         its compiled artifact (:meth:`CompiledProgram.bind_arrays` — no
         N Program objects, no N probes) and execute in one pass.
 
-        ``compute_scale`` — (N,) per-scenario or (nranks, N) per-rank
+        ``compute_scale`` — (N,) per-scenario, (nranks, N) per-rank, or
+        (n_computes, N) per-compute-slot (slots in static-walk order;
+        when ``nranks == n_computes`` the per-rank reading wins)
         multiplicative compute skew; ``byte_scale`` — (N,) per-scenario
         or (n_posts, N) per-post multiplier on point-to-point payloads
         (rounded to whole bytes); ``site_scale`` — (N,) per-scenario or
@@ -745,14 +747,20 @@ class ExanetMPI:
             cs = np.asarray(compute_scale, dtype=np.float64)
             if cs.ndim == 1:
                 comp_cols = base_comp[:, None] * cs[None, :]
-            else:
-                if cs.shape[0] != prog.nranks:
-                    raise ValueError(
-                        f"compute_scale must be (N,) or (nranks, N); got "
-                        f"{cs.shape} for nranks={prog.nranks}")
+            elif cs.shape[0] == prog.nranks:
                 art0 = self.program_artifact(prog)
                 comp_cols = base_comp[:, None] * \
                     cs[art0._static.compute_rank]
+            elif cs.shape[0] == len(base_comp):
+                # per-compute-slot skew: the train co-sim's bucket-layout
+                # axis (candidates move backward compute between buckets,
+                # not between ranks)
+                comp_cols = base_comp[:, None] * cs
+            else:
+                raise ValueError(
+                    f"compute_scale must be (N,), (nranks, N) or "
+                    f"(n_computes, N); got {cs.shape} for "
+                    f"nranks={prog.nranks}, n_computes={len(base_comp)}")
         if byte_scale is not None:
             bs = np.asarray(byte_scale, dtype=np.float64)
             if bs.ndim == 1:

@@ -101,8 +101,10 @@ class _CollSite:
     idx: int
     op: str
     algo: str
+    handle: str | None  # None = blocking barrier; else nonblocking site
     entry_gid: list   # per rank: segment whose exit clock is the entry
-    exit_gid: list    # per rank: segment the exits produce
+    exit_gid: list    # per rank: segment the exits produce (blocking only)
+    entry_item: list  # per rank: item index of the entry (nonblocking only)
 
 
 class _Static:
@@ -171,15 +173,42 @@ class _Static:
                 elif isinstance(op, Collective):
                     if coll_i == len(self.sites):
                         self.sites.append(_CollSite(
-                            coll_i, op.op, op.algo, [None] * nranks,
+                            coll_i, op.op, op.algo, op.handle,
+                            [None] * nranks, [None] * nranks,
                             [None] * nranks))
                     site = self.sites[coll_i]
+                    if (site.op, site.algo, site.handle) != \
+                            (op.op, op.algo, op.handle):
+                        # a handle mismatch changes the *structure* (a
+                        # blocking rank cuts a segment, a nonblocking one
+                        # does not), so it must be rejected here, not at
+                        # probe time
+                        raise ProgramError(
+                            f"collective mismatch at site #{coll_i}: "
+                            f"rank {r} calls ({op.op}, {op.algo}, "
+                            f"{op.handle}), another rank called "
+                            f"({site.op}, {site.algo}, {site.handle})")
                     site.entry_gid[r] = gid
-                    new_gid = n_segs
-                    n_segs += 1
-                    site.exit_gid[r] = new_gid
-                    self.seg_producer[new_gid] = ("x", coll_i)
-                    gid = new_gid
+                    if op.handle is not None:
+                        # nonblocking: the entry is an in-segment item
+                        # (costing one post overhead, like an Isend) and
+                        # the completion a pseudo-request a later Wait
+                        # consumes — the rank's segment is NOT cut
+                        site.entry_item[r] = len(self.items)
+                        self.items.append(("a", coll_i, gid))
+                        token = ("x", coll_i)
+                        outstanding.append(token)
+                        if op.handle in named:
+                            raise ProgramError(
+                                f"rank {r}: handle {op.handle!r} reused "
+                                f"while still outstanding")
+                        named[op.handle] = token
+                    else:
+                        new_gid = n_segs
+                        n_segs += 1
+                        site.exit_gid[r] = new_gid
+                        self.seg_producer[new_gid] = ("x", coll_i)
+                        gid = new_gid
                     coll_i += 1
             self.last_gid.append(gid)
         self.n_segs = n_segs
@@ -217,8 +246,15 @@ class _Static:
             sorted(seg_first, key=lambda g: seg_first[g]), dtype=np.int64)
         self.post_item = np.array([p.item for p in self.posts],
                                   dtype=np.int64)
-        self.item_is_post = np.array([k == "p" for (k, _, _) in self.items],
+        # posts AND nonblocking-collective entries both cost one post
+        # overhead on the poster's clock
+        self.item_is_post = np.array([k != "c" for (k, _, _) in self.items],
                                      dtype=bool)
+        # nonblocking sites get virtual completion rows past the p2p
+        # events: row n_events + async_ord[site]*nranks + rank
+        self.async_ord = {s.idx: i for i, s in enumerate(
+            s for s in self.sites if s.handle is not None)}
+        self.n_async = len(self.async_ord)
         # compute slots are appended rank-major, so per-rank totals are a
         # reduceat over contiguous runs
         first_gids = np.array(self.first_gid, dtype=np.int64)
@@ -350,7 +386,9 @@ class _CollSlot:
     sched: object | None        # schedule instance (stateless)
     rp: object | None           # compiled RoundProgram
     entry: np.ndarray           # (nranks,) entry segment ids
-    exit: np.ndarray            # (nranks,) produced segment ids
+    exit: np.ndarray | None     # (nranks,) produced segment ids (blocking)
+    entry_item: np.ndarray | None  # (nranks,) entry items (nonblocking)
+    virt_base: int              # first virtual done-row (nonblocking)
 
 
 @dataclasses.dataclass
@@ -386,6 +424,7 @@ class _BoundIR:
     rank_compute: np.ndarray    # (nranks, B)
     levels: list                # _BoundLevel per _LevelPlan (None w/o p2p)
     site_sizes: list            # per site: tuple of per-column nbytes
+    coll_entry_off: dict        # async site idx -> (nranks, B) item offsets
 
 
 class CompiledProgram(VecTransport):
@@ -472,6 +511,15 @@ class CompiledProgram(VecTransport):
                     stack.append(w.prev_gid)
                     continue
                 for pi in w.consumed:
+                    if isinstance(pi, tuple):   # nonblocking collective
+                        if pi[1] not in coll_level:
+                            raise ProgramStructureError(
+                                "wait consumes a nonblocking collective "
+                                "the probe never fired")
+                        # the splice executes after the level's waits, so
+                        # a consuming wait lands one level later
+                        lv = max(lv, coll_level[pi[1]] + 1)
+                        continue
                     rec = st.event_of_post.get(pi)
                     if rec is None or rec[0] not in ev_level:
                         raise ProgramStructureError(
@@ -526,13 +574,16 @@ class CompiledProgram(VecTransport):
                 lv = floor
                 for r in range(self.nranks):
                     lv = max(lv, resolve_seg(site.entry_gid[r]))
-                # full barrier: the interpreter fired every recorded event
-                # before the last rank arrived, so the splice must follow
-                # everything assigned so far
+                # the interpreter fired every recorded event before the
+                # last rank arrived, so the splice must follow everything
+                # assigned so far (nonblocking sites keep the same
+                # conservative ordering: levels only sequence resource
+                # acquisitions, the entry clocks stay mid-segment)
                 lv = max(lv, amax + 1)
                 coll_level[s] = lv
-                for r in range(self.nranks):
-                    avail[site.exit_gid[r]] = lv + 1
+                if site.handle is None:
+                    for r in range(self.nranks):
+                        avail[site.exit_gid[r]] = lv + 1
                 floor = lv + 1
                 amax = lv
                 row_tags = {}
@@ -604,12 +655,20 @@ class CompiledProgram(VecTransport):
 
     def _lower_waits(self, ws: list[_WaitNode]) -> _WaitPlan:
         st = self._static
+        n_events = len(st.events)
         req_ev, req_side, starts, with_req = [], [], [], []
         for i, w in enumerate(ws):
             if w.consumed:
                 with_req.append(i)
                 starts.append(len(req_ev))
                 for pi in w.consumed:
+                    if isinstance(pi, tuple):   # nonblocking collective:
+                        # virtual completion row of (site, waiting rank)
+                        req_ev.append(n_events
+                                      + st.async_ord[pi[1]] * self.nranks
+                                      + w.rank)
+                        req_side.append(True)
+                        continue
                     e, is_send = st.event_of_post[pi]
                     req_ev.append(e)
                     req_side.append(is_send)
@@ -622,14 +681,23 @@ class CompiledProgram(VecTransport):
             starts=np.array(starts, dtype=np.int64))
 
     def _lower_coll(self, site: _CollSite, name: str | None) -> _CollSlot:
+        st = self._static
         entry = np.array(site.entry_gid, dtype=np.int64)
-        exit_ = np.array(site.exit_gid, dtype=np.int64)
+        if site.handle is None:
+            exit_ = np.array(site.exit_gid, dtype=np.int64)
+            entry_item = None
+            virt_base = -1
+        else:
+            exit_ = None
+            entry_item = np.array(site.entry_item, dtype=np.int64)
+            virt_base = len(st.events) + st.async_ord[site.idx] * self.nranks
         sched = rp = None
         if name is not None and name != "accel":
             from repro.core.exanet.schedules import COLLECTIVE_SCHEDULES
             sched = COLLECTIVE_SCHEDULES[site.op][name]()
             rp = self._mpi.compiled_program(sched, self.nranks)
-        return _CollSlot(site, name, sched, rp, entry, exit_)
+        return _CollSlot(site, name, sched, rp, entry, exit_, entry_item,
+                         virt_base)
 
     # ----------------------------------------------------------------- bind
     def _tape_of(self, prog, plans, data, names) -> tuple:
@@ -821,6 +889,9 @@ class CompiledProgram(VecTransport):
         rank_compute = np.zeros((self.nranks, B))
         if st.n_computes:
             np.add.at(rank_compute, st.compute_rank, comp_cols)
+        coll_entry_off = {
+            s.idx: item_off[np.array(s.entry_item, dtype=np.int64)]
+            for s in st.sites if s.handle is not None}
         b_levels = []
         for plan in lowered.levels:
             if plan.p2p is None:
@@ -840,7 +911,7 @@ class CompiledProgram(VecTransport):
                 any_r=bool(is_rdv.any()),
                 uni=bool((nb == nb[:1]).all())))
         return _BoundIR(B, lowered, post_off, seg_total, rank_compute,
-                        b_levels, site_sizes)
+                        b_levels, site_sizes, coll_entry_off)
 
     # ------------------------------------------------------------ execution
     def run(self, bound: _BoundIR, *, engine=None,
@@ -873,9 +944,12 @@ class CompiledProgram(VecTransport):
                     f"t0 must have shape ({self.nranks},) or "
                     f"({self.nranks}, {B}), got {t0.shape}")
             C[st.first_gid_arr] = t0
-        n_events = len(st.events)
-        send_done = np.empty((n_events, B))
-        recv_done = np.empty((n_events, B))
+        # virtual rows past the p2p events hold the per-(site, rank) exit
+        # clocks of nonblocking collectives, consumed by waits like any
+        # send-side completion
+        n_rows = len(st.events) + st.n_async * self.nranks
+        send_done = np.empty((n_rows, B))
+        recv_done = np.empty((n_rows, B))
         for plan, bl in zip(lowered.levels, bound.levels):
             if plan.p2p is not None:
                 self._exec_p2p_level(state, plan.p2p, bl, C, bound,
@@ -883,14 +957,14 @@ class CompiledProgram(VecTransport):
             if plan.waits is not None:
                 self._exec_waits(plan.waits, C, bound, send_done, recv_done)
             if plan.coll is not None:
-                self._exec_coll(state, plan.coll, C, bound)
+                self._exec_coll(state, plan.coll, C, bound, send_done)
         final = C[st.last_gid_arr] + bound.seg_total[st.last_gid_arr]
         latency = final.max(axis=0) if self.nranks else np.zeros(B)
         return [ProgramResult(
             float(latency[b]),
             tuple(float(x) for x in final[:, b]),
             tuple(float(x) for x in bound.rank_compute[:, b]),
-            n_events, len(st.sites)) for b in range(B)]
+            len(st.events), len(st.sites)) for b in range(B)]
 
     def _exec_p2p_level(self, state, pl: _PLevel, bl: _BoundLevel, C,
                         bound, send_done, recv_done) -> None:
@@ -927,25 +1001,32 @@ class CompiledProgram(VecTransport):
             exit_[wp.with_req] = np.maximum(exit_[wp.with_req], gm)
         C[wp.target] = exit_
 
-    def _exec_coll(self, state, slot: _CollSlot, C, bound) -> None:
-        st = self._static
-        enters = C[slot.entry] + bound.seg_total[slot.entry]
+    def _exec_coll(self, state, slot: _CollSlot, C, bound,
+                   send_done=None) -> None:
+        if slot.entry_item is None:         # blocking: entry ends a segment
+            enters = C[slot.entry] + bound.seg_total[slot.entry]
+        else:                               # nonblocking: mid-segment item
+            enters = C[slot.entry] + bound.coll_entry_off[slot.site.idx]
         sizes = bound.site_sizes[slot.site.idx]
         if slot.name is None:               # nranks < 2: pass-through
-            C[slot.exit] = enters
-            return
-        if slot.name == "accel":
+            exits = enters
+        elif slot.name == "accel":
             from repro.core.exanet.allreduce_accel import accel_cost_us
             cost = np.array([accel_cost_us(s, self.nranks, self._p)
                              for s in sizes])
-            C[slot.exit] = enters.max(axis=0)[None, :] + cost[None, :]
-            return
-        rp, sched = slot.rp, slot.sched
-        res = rp.run(sched, sizes, state=state, t0=enters,
-                     engine=self._eng)
-        b = rp.bind(sched, sizes)
-        C[slot.exit] = res.clocks.T + b.post_copy_us[None, :] + \
-            self._p.barrier_exit_us
+            exits = np.broadcast_to(
+                enters.max(axis=0)[None, :] + cost[None, :], enters.shape)
+        else:
+            rp, sched = slot.rp, slot.sched
+            res = rp.run(sched, sizes, state=state, t0=enters,
+                         engine=self._eng)
+            b = rp.bind(sched, sizes)
+            exits = res.clocks.T + b.post_copy_us[None, :] + \
+                self._p.barrier_exit_us
+        if slot.entry_item is None:
+            C[slot.exit] = exits
+        else:
+            send_done[slot.virt_base:slot.virt_base + self.nranks] = exits
 
 
 def compile_program_ir(mpi, prog: Program) -> CompiledProgram:

@@ -475,6 +475,21 @@ class ExanetMachine:
                 out[i] = r.latency_us * 1e-6
         return out
 
+    def cost_program_scenarios(self, prog, *, compute_scale=None,
+                               site_scale=None, t0=None, engine=None,
+                               check: int = 0, rtol: float = 1e-9):
+        """Batched scenario costing of ONE program: bind per-column
+        compute skew / collective payload scale / entry clocks onto the
+        compiled artifact of ``prog`` and replay every column at once
+        (:meth:`ExanetMPI.run_program_scenarios` on the tier that fits
+        the rank count).  This is the machine-level fast lane the train
+        co-sim's candidate populations and the serve step table ride;
+        returns one :class:`~repro.core.program.ProgramResult` per
+        column."""
+        return self._mpi_for(prog.nranks).run_program_scenarios(
+            prog, compute_scale=compute_scale, site_scale=site_scale,
+            t0=t0, engine=engine, check=check, rtol=rtol)
+
     def memory_pass_s(self, nbytes: int) -> float:
         """One read+write pass on an A53 endpoint (single DDR4 channel is
         the §6.2 bottleneck)."""

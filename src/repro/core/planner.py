@@ -101,6 +101,26 @@ class Plan:
         return None
 
 
+@dataclasses.dataclass(frozen=True)
+class TrainSyncPlan:
+    """Outcome of one train-sync planning run
+    (:meth:`CollectivePlanner.plan_train_sync`): the simulated-best
+    gradient-sync candidate next to the analytic-policy baseline, with
+    the step-time margin that justifies (or refutes) a flip."""
+    arch: str
+    nranks: int
+    chosen: object                  #: winning repro.train.cosim.SyncCandidate
+    step_us: float                  #: its simulated step time
+    baseline: object                #: the analytic CommPolicy candidate
+    baseline_step_us: float         #: its simulated step time
+    flipped: bool                   #: does the decision differ at all?
+    flip_kinds: tuple[str, ...]     #: which knobs differ
+    margin: float                   #: (baseline - chosen) / baseline
+    evaluated: int                  #: candidates costed (batched)
+    machine: str
+    fidelity: str = "sim"
+
+
 #: software allreduce candidates, in tie-breaking preference order
 #: (latency-optimal first: ties at tiny sizes resolve to the eager path)
 ALLREDUCE_CANDIDATES: tuple[tuple[str, type], ...] = (
@@ -424,6 +444,61 @@ class CollectivePlanner:
                 costs.append(("compressed",
                               intra + inter_q + 2.0 * mem_pass(shard)))
         return self._pick("grad_sync", nbytes, participants, costs, fidelity)
+
+    # ------------------------------------------------- train-sync planning
+    def plan_train_sync(self, sim, *, generations: int = 2,
+                        survivors: int = 4, children: int = 4,
+                        candidates=None, engine=None, check: int = 0,
+                        seed: int = 0) -> TrainSyncPlan:
+        """Hillclimb gradient-sync configurations (bucket layout,
+        schedule, overlap depth) against *simulated* train-step time
+        (DESIGN.md §2.9).
+
+        ``sim`` is the cost oracle and domain surface — anything with
+        the :class:`repro.train.cosim.TrainSim` protocol
+        (``candidate_grid`` / ``cost_candidates`` / ``mutate`` /
+        ``analytic_candidate`` / ``spec`` / ``machine``); the planner
+        contributes only the search policy, so it stays import-clean of
+        the train layer.  Every generation is costed through the sim's
+        batched scenario lane (one compiled replay per structure
+        family), which is what makes population search affordable at
+        512-4096 ranks.  The returned plan carries the analytic
+        ``CommPolicy`` baseline and the step-time margin, i.e. whether
+        simulated overlap *flips* the analytic decision."""
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        base_cand = sim.analytic_candidate()
+        pop = list(candidates) if candidates is not None \
+            else sim.candidate_grid()
+        if base_cand not in pop:
+            pop.append(base_cand)
+        seen = dict(zip(pop, sim.cost_candidates(pop, engine=engine,
+                                                 check=check)))
+        for _ in range(generations):
+            elite = sorted(seen, key=seen.get)[:survivors]
+            kids = [sim.mutate(c, rng) for c in elite
+                    for _ in range(children)]
+            kids = [k for k in dict.fromkeys(kids) if k not in seen]
+            if not kids:
+                break
+            seen.update(zip(kids, sim.cost_candidates(kids, engine=engine,
+                                                      check=check)))
+        best = min(seen, key=seen.get)
+        best_us, base_us = float(seen[best]), float(seen[base_cand])
+        kinds = tuple(
+            k for k, differs in (
+                ("n_buckets", best.n_buckets != base_cand.n_buckets),
+                ("algo", best.algo != base_cand.algo),
+                ("overlap_depth",
+                 best.overlap_depth != base_cand.overlap_depth),
+                ("split", best.split != base_cand.split),
+            ) if differs)
+        return TrainSyncPlan(
+            arch=sim.spec.arch, nranks=sim.spec.nranks, chosen=best,
+            step_us=best_us, baseline=base_cand, baseline_step_us=base_us,
+            flipped=bool(kinds), flip_kinds=kinds,
+            margin=(base_us - best_us) / base_us if base_us else 0.0,
+            evaluated=len(seen), machine=sim.machine.name)
 
     # --------------------------------------------------------- thresholds
     def eager_threshold_bytes(self, p: int, *, level: str = INTRA) -> int:

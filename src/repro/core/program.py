@@ -86,10 +86,21 @@ class Wait:
 class Collective:
     """An embedded collective over all program ranks.  ``algo="auto"``
     defers schedule choice to the planner (allreduce only; other ops fall
-    back to their single shipped schedule)."""
+    back to their single shipped schedule).
+
+    With ``handle=None`` the collective is a full barrier: every rank's
+    clock advances to its exit.  With a handle it is *nonblocking*
+    (MPI_Iallreduce): each rank records its entry clock and keeps
+    executing — the transfer progresses off the core (NI/DMA-driven) —
+    and a later :class:`Wait` on the handle (or ``Wait()``) joins the
+    rank's exit clock.  This is the seam that lets backward/sync overlap
+    in a training step be *emergent* rather than assumed: the exit clocks
+    still come from the full schedule replay on the shared engine
+    resources, only the rank cores stop standing still."""
     op: str                 # "allreduce" | "bcast" | "allgather" | ...
     nbytes: int
     algo: str = "auto"
+    handle: str | None = None   # None = blocking barrier semantics
 
 
 Op = Union[Compute, Isend, Irecv, Wait, Collective]
@@ -152,7 +163,7 @@ class Program:
                 elif isinstance(op, Wait):
                     row.append(("w", op.handles))
                 elif isinstance(op, Collective):
-                    row.append(("x", op.op, op.algo))
+                    row.append(("x", op.op, op.algo, op.handle))
                 else:
                     row.append(("?", repr(op)))
             sig.append(tuple(row))
@@ -371,6 +382,8 @@ class ProgramExecutor:
         blocked: dict[int, tuple] = {}
         coll_idx = [0] * n
         barriers: dict[int, dict[int, float]] = {}
+        # nonblocking collective sites: site -> {rank: pseudo-request}
+        coll_reqs: dict[int, dict[int, _Req]] = {}
         ready = [(t0s[r], r) for r in range(n) if prog.rank_ops[r]]
         heapq.heapify(ready)
 
@@ -436,7 +449,7 @@ class ProgramExecutor:
             elif isinstance(op, Collective):
                 site = coll_idx[r]
                 coll_idx[r] += 1
-                sig = (op.op, op.nbytes, op.algo)
+                sig = (op.op, op.nbytes, op.algo, op.handle)
                 bar, first = barriers.setdefault(site, ({}, sig))
                 if sig != first:
                     raise ProgramError(
@@ -445,7 +458,30 @@ class ProgramExecutor:
                         f"ranks must reach matching collectives in the "
                         f"same order")
                 bar[r] = clock[r]
-                if len(bar) == n:
+                if op.handle is not None:
+                    # nonblocking: register a pseudo-request per rank (the
+                    # entry pays the same local post cost as an Isend) and
+                    # keep executing; the hook fires on last arrival and
+                    # completes the requests without touching clocks.
+                    req = _Req(r, -1, op.nbytes, -1, False, clock[r])
+                    clock[r] += self.post_overhead_us
+                    outstanding[r].append(req)
+                    if (r, op.handle) in named:
+                        raise ProgramError(
+                            f"rank {r}: handle {op.handle!r} reused while "
+                            f"still outstanding")
+                    named[(r, op.handle)] = req
+                    coll_reqs.setdefault(site, {})[r] = req
+                    if len(bar) == n:
+                        enters = [bar[i] for i in range(n)]
+                        exits = self._collective(op.op, op.nbytes, op.algo,
+                                                 enters)
+                        n_coll += 1
+                        del barriers[site]
+                        for i, q in coll_reqs.pop(site).items():
+                            q.t_done = exits[i]
+                        wake_waiters()
+                elif len(bar) == n:
                     enters = [bar[i] for i in range(n)]
                     exits = self._collective(op.op, op.nbytes, op.algo,
                                              enters)
@@ -495,6 +531,8 @@ class ProgramExecutor:
             else:
                 pend = [q for q in b[1] if q.t_done is None]
                 what = ", ".join(
+                    f"Collective({q.nbytes} B) some ranks never post"
+                    if q.peer < 0 else
                     f"{'Isend' if q.is_send else 'Irecv'}(peer={q.peer}, "
                     f"tag={q.tag}, {q.nbytes} B)" for q in pend[:4])
                 parts.append(f"  rank {r}: Wait on unmatched {what}")

@@ -148,7 +148,8 @@ def _compressed_allreduce(b, mesh, axes):
 
 # -------------------------------------------------------- program emission
 def emit_sync_program(nranks: int, bucket_bytes_list, *,
-                      compute_us_per_bucket=0.0, algo: str = "auto"):
+                      compute_us_per_bucket=0.0, algo: str = "auto",
+                      overlap_depth: int = 0):
     """Emit the train-step gradient-sync :class:`repro.core.program.Program`
     of a bucketed backward pass: per bucket, the backward-compute slice
     that produces it, then its allreduce.
@@ -162,11 +163,16 @@ def emit_sync_program(nranks: int, bucket_bytes_list, *,
     ``bucket_bytes_list`` is the per-bucket byte count — e.g.
     ``[b.size * b.dtype.itemsize for b in flatten_to_buckets(grads, n)[0]]``
     — and ``compute_us_per_bucket`` a scalar or per-bucket sequence of the
-    backward microseconds preceding each bucket's readiness.  Pure
+    backward microseconds preceding each bucket's readiness.
+    ``overlap_depth > 0`` emits the allreduces *nonblocking*
+    (``Collective(handle=...)``): up to ``overlap_depth`` syncs ride
+    behind the following buckets' compute, each drained by a ``Wait``
+    that many buckets later, with a final ``Wait()`` at the end — the
+    overlap seam the train co-sim (DESIGN.md §2.9) searches over.  Pure
     host-side (no jax): callable from tests and benchmarks without
     devices.
     """
-    from repro.core.program import Collective, Compute, Program
+    from repro.core.program import Collective, Compute, Program, Wait
     sizes = [int(b) for b in bucket_bytes_list]
     try:
         per_bucket = [float(c) for c in compute_us_per_bucket]
@@ -176,16 +182,46 @@ def emit_sync_program(nranks: int, bucket_bytes_list, *,
         raise ValueError(f"{len(sizes)} buckets but {len(per_bucket)} "
                          f"compute entries")
     ops = []
-    for nb, us in zip(sizes, per_bucket):
+    for i, (nb, us) in enumerate(zip(sizes, per_bucket)):
         if us > 0.0:
             ops.append(Compute(us))
-        ops.append(Collective("allreduce", max(nb, 1), algo))
+        if overlap_depth > 0:
+            ops.append(Collective("allreduce", max(nb, 1), algo,
+                                  handle=f"g{i}"))
+            if i - overlap_depth >= 0:
+                ops.append(Wait((f"g{i - overlap_depth}",)))
+        else:
+            ops.append(Collective("allreduce", max(nb, 1), algo))
+    if overlap_depth > 0:
+        ops.append(Wait())
     return Program(tuple(tuple(ops) for _ in range(nranks)))
+
+
+# per-machine memo of cost_sync_program_s: the planner/hillclimb inner
+# loops hammer identical (nranks, bucket layout, algo) queries, and each
+# miss re-emits, re-probes and re-simulates a whole Program.  Weak keys:
+# a machine's entry dies with the machine.
+_sync_cost_cache: "weakref.WeakKeyDictionary" = None  # built on first use
+_sync_cost_stats = {"hits": 0, "misses": 0}
+
+
+def sync_cost_cache_info() -> dict:
+    """Hit/miss counters of the :func:`cost_sync_program_s` memo."""
+    size = 0
+    if _sync_cost_cache is not None:
+        size = sum(len(v) for v in _sync_cost_cache.values())
+    return {**_sync_cost_stats, "size": size}
+
+
+def clear_sync_cost_cache() -> None:
+    global _sync_cost_cache
+    _sync_cost_cache = None
+    _sync_cost_stats["hits"] = _sync_cost_stats["misses"] = 0
 
 
 def cost_sync_program_s(machine, nranks: int, bucket_bytes_list, *,
                         compute_us_per_bucket=0.0, algo: str = "auto",
-                        fidelity: str = "sim",
+                        overlap_depth: int = 0, fidelity: str = "sim",
                         backend: str = "auto") -> float:
     """Predicted seconds of one bucketed gradient sync on a machine: the
     :func:`emit_sync_program` emission costed through
@@ -193,19 +229,43 @@ def cost_sync_program_s(machine, nranks: int, bucket_bytes_list, *,
     machine, ``backend="auto"`` replays the bucket pipeline as a compiled
     level program (collective sites splice their compiled round programs),
     so sweeping bucket layouts is a batched array workload instead of
-    per-bucket event interpretation.  Pure host-side: no jax, callable
-    from tests and benchmarks without devices."""
+    per-bucket event interpretation.  Results are memoized per
+    (machine, nranks, bucket tuple, compute tuple, algo, overlap depth,
+    fidelity, backend) — see :func:`sync_cost_cache_info`.  Pure
+    host-side: no jax, callable from tests and benchmarks without
+    devices."""
     import inspect
-    prog = emit_sync_program(nranks, bucket_bytes_list,
-                             compute_us_per_bucket=compute_us_per_bucket,
-                             algo=algo)
+    import weakref as _weakref
+    global _sync_cost_cache
+    sizes = tuple(int(b) for b in bucket_bytes_list)
+    try:
+        comp = tuple(float(c) for c in compute_us_per_bucket)
+    except TypeError:
+        comp = (float(compute_us_per_bucket),) * len(sizes)
+    key = (int(nranks), sizes, comp, algo, int(overlap_depth), fidelity,
+           backend)
+    if _sync_cost_cache is None:
+        _sync_cost_cache = _weakref.WeakKeyDictionary()
+    try:
+        per_machine = _sync_cost_cache.setdefault(machine, {})
+    except TypeError:                 # unhashable/unweakrefable machine
+        per_machine = None
+    if per_machine is not None and key in per_machine:
+        _sync_cost_stats["hits"] += 1
+        return per_machine[key]
+    _sync_cost_stats["misses"] += 1
+    prog = emit_sync_program(nranks, sizes, compute_us_per_bucket=comp,
+                             algo=algo, overlap_depth=overlap_depth)
     kw = {"fidelity": fidelity}
     # signature probe, not try/except TypeError: a genuine TypeError from
     # inside a machine's sim path must surface, not trigger a silent
     # backend-less recomputation
     if "backend" in inspect.signature(machine.cost_program).parameters:
         kw["backend"] = backend
-    return machine.cost_program(prog, **kw)
+    out = machine.cost_program(prog, **kw)
+    if per_machine is not None:
+        per_machine[key] = out
+    return out
 
 
 class CompressedSync:

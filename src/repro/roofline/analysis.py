@@ -148,6 +148,72 @@ def lm_serve_step_cost(cfg, *, n_decode: float, decode_kv: float,
     }
 
 
+def lm_train_step_cost(cfg, *, seq_len: int, batch: int,
+                       dtype_bytes: int = 2,
+                       grad_dtype_bytes: int = 2) -> dict:
+    """Closed-form cost of ONE data-parallel training step for an
+    :class:`~repro.config.ArchConfig` — the train-side twin of
+    :func:`lm_serve_step_cost`, and the analytic cross-anchor for the
+    synthetic-HLO estimate (:func:`repro.roofline.hlo_cost.synth_train_hlo`
+    through the same while-rollup cost model real dry-run artifacts use).
+
+    FLOPs follow the 6N rule split as 2N forward + 4N backward per token
+    (N = active params; MoE charges top-k + shared experts only) plus the
+    context-dependent attention term that rule omits, charged at the mean
+    causal context ``seq_len/2`` forward and twice that backward.  HBM
+    bytes charge one weight sweep forward, two backward (read weights,
+    write gradients) and one optimizer pass over master weights;
+    ``grad_bytes`` is the full data-parallel gradient volume one rank
+    contributes to the sync — bucketing/sharding is the caller's concern
+    (:mod:`repro.train.cosim`).
+    """
+    Na = float(cfg.active_param_count())
+    P = float(cfg.param_count())
+    L, hd = cfg.n_layers, cfg.resolved_head_dim
+    tokens = float(seq_len) * float(batch)
+    attn_fl_tok = 4.0 * L * cfg.n_heads * hd      # flops/token/ctx-token
+    fwd = tokens * (2.0 * Na + attn_fl_tok * seq_len / 2.0)
+    bwd = 2.0 * fwd
+    act_tok = cfg.n_layers * cfg.d_model * dtype_bytes
+    return {
+        "tokens": tokens,
+        "fwd_flops": fwd,
+        "bwd_flops": bwd,
+        "flops": fwd + bwd,
+        "grad_bytes": P * grad_dtype_bytes,
+        "param_bytes": P * dtype_bytes,
+        "hbm_bytes": 4.0 * P * dtype_bytes + 2.0 * tokens * act_tok,
+        "act_bytes_per_token": act_tok,
+    }
+
+
+def serve_step_calibration(cfg, *, measured_step_us: float,
+                           n_decode: float, decode_kv: float,
+                           n_prefill: float = 0.0, prefill_kv: float = 0.0,
+                           dtype_bytes: int = 2,
+                           rate_flops_per_us: float,
+                           bw_bytes_per_us: float,
+                           overhead_us: float = 0.0) -> dict:
+    """Measured-vs-predicted anchor for :func:`lm_serve_step_cost`: fold a
+    measured per-step time (e.g. ``launch/serve.py``'s wall-clock over
+    engine steps) back onto the roofline prediction for the same step
+    state and report the ratio — the single calibration constant that
+    would make the closed form match the measurement
+    (``BENCH_serve.json``'s ``calibration`` row)."""
+    c = lm_serve_step_cost(cfg, n_decode=n_decode, decode_kv=decode_kv,
+                           n_prefill=n_prefill, prefill_kv=prefill_kv,
+                           dtype_bytes=dtype_bytes)
+    predicted = overhead_us + max(c["flops"] / rate_flops_per_us,
+                                  c["hbm_bytes"] / bw_bytes_per_us)
+    return {
+        "measured_step_us": float(measured_step_us),
+        "predicted_step_us": float(predicted),
+        "measured_over_predicted": float(measured_step_us) / predicted,
+        "predicted_flops": c["flops"],
+        "predicted_hbm_bytes": c["hbm_bytes"],
+    }
+
+
 def roofline_from_compiled(compiled, meta: dict, hw=V5E) -> dict:
     """Roofline terms from the compiled artifact.
 

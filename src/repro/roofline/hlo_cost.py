@@ -309,6 +309,155 @@ def _trip_multipliers(model: HloCostModel) -> dict:
     return mult
 
 
+# -------------------------------------------------- synthetic train modules
+def synth_train_hlo(cfg, *, seq_len: int, batch: int = 1,
+                    microbatches: int = 1, dtype: str = "bf16") -> str:
+    """Parser-compatible HLO text of one *forward* training step for an
+    :class:`~repro.config.ArchConfig` — the compute anchor the train
+    co-sim (:mod:`repro.train.cosim`) feeds through :func:`analyze_hlo`
+    instead of compiling a multi-hundred-B-parameter graph to read its
+    text.  The module is shaped like a real scan-over-layers lowering:
+
+    * an outer ``while`` over microbatches (``known_trip_count``),
+    * nested ``while`` loops over the dense and MoE layer stacks,
+    * per-layer ``dot`` ops sized from the config (attention projections,
+      full-context score/value matmuls, gated MLP or top-k + shared
+      experts), and the LM head per microbatch,
+    * one ``all-reduce`` of the f32 gradient at ENTRY (the DP sync whose
+      bucketing the co-sim searches over).
+
+    The nested loops are exactly what ``cost_analysis()`` mis-counts and
+    the while-rollup (:class:`HloCostModel`, :func:`_trip_multipliers`)
+    exists to fix, so this generator doubles as their test surface.
+    Backward cost is the caller's multiplier (the standard 2x forward).
+    """
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    T = max(1, (seq_len * batch) // max(1, microbatches))
+    qh, kvh = cfg.n_heads * hd, 2 * cfg.n_kv_heads * hd
+    up_mult = 2 if getattr(cfg, "mlp_gated", True) else 1
+    state = f"(s32[], {dtype}[{T},{d}])"
+    lines: list[str] = []
+
+    def attn(tag: str) -> list[str]:
+        return [
+            f"  %{tag}.wq = {dtype}[{d},{qh}]{{1,0}} constant(0)",
+            f"  %{tag}.wkv = {dtype}[{d},{kvh}]{{1,0}} constant(0)",
+            f"  %{tag}.wo = {dtype}[{qh},{d}]{{1,0}} constant(0)",
+            f"  %{tag}.q = {dtype}[{T},{qh}]{{1,0}} dot(%x, %{tag}.wq), "
+            f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}",
+            f"  %{tag}.kv = {dtype}[{T},{kvh}]{{1,0}} dot(%x, %{tag}.wkv), "
+            f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}",
+            # per-head score/value matmuls, heads folded into the rows:
+            # [H*T, hd] x [hd, T] charges the full 2*H*T*T*hd like XLA's
+            # unfused lowering (causal masking discards, not skips, work)
+            f"  %{tag}.qh = {dtype}[{cfg.n_heads * T},{hd}]{{1,0}} "
+            f"reshape(%{tag}.q)",
+            f"  %{tag}.kt = {dtype}[{hd},{T}]{{1,0}} reshape(%{tag}.kv)",
+            f"  %{tag}.s = {dtype}[{cfg.n_heads * T},{T}]{{1,0}} "
+            f"dot(%{tag}.qh, %{tag}.kt), "
+            f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}",
+            f"  %{tag}.vt = {dtype}[{T},{hd}]{{1,0}} reshape(%{tag}.kv)",
+            f"  %{tag}.av = {dtype}[{cfg.n_heads * T},{hd}]{{1,0}} "
+            f"dot(%{tag}.s, %{tag}.vt), "
+            f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}",
+            f"  %{tag}.ctx = {dtype}[{T},{qh}]{{1,0}} reshape(%{tag}.av)",
+            f"  %{tag}.o = {dtype}[{T},{d}]{{1,0}} dot(%{tag}.ctx, "
+            f"%{tag}.wo), lhs_contracting_dims={{1}}, "
+            f"rhs_contracting_dims={{0}}",
+        ]
+
+    def mlp(tag: str, width: int, rows: int = 0) -> list[str]:
+        """Gated MLP dots at hidden ``width``; ``rows`` > 0 folds a
+        top-k token replication into the row dimension (MoE routing)."""
+        R = rows or T
+        out = []
+        if rows:
+            out.append(f"  %{tag}.xr = {dtype}[{R},{d}]{{1,0}} "
+                       f"reshape(%x)")
+        src = f"%{tag}.xr" if rows else "%x"
+        out += [
+            f"  %{tag}.wu = {dtype}[{d},{up_mult * width}]{{1,0}} "
+            f"constant(0)",
+            f"  %{tag}.wd = {dtype}[{width},{d}]{{1,0}} constant(0)",
+            f"  %{tag}.up = {dtype}[{R},{up_mult * width}]{{1,0}} "
+            f"dot({src}, %{tag}.wu), lhs_contracting_dims={{1}}, "
+            f"rhs_contracting_dims={{0}}",
+            f"  %{tag}.h = {dtype}[{R},{width}]{{1,0}} reshape(%{tag}.up)",
+            f"  %{tag}.dn = {dtype}[{R},{d}]{{1,0}} dot(%{tag}.h, "
+            f"%{tag}.wd), lhs_contracting_dims={{1}}, "
+            f"rhs_contracting_dims={{0}}",
+        ]
+        return out
+
+    def layer_comp(name: str, body_mid: list[str]) -> None:
+        lines.extend([
+            f"%{name} (p: {state}) -> {state} {{",
+            f"  %p = {state} parameter(0)",
+            f"  %i = s32[] get-tuple-element(%p), index=0",
+            f"  %x = {dtype}[{T},{d}]{{1,0}} get-tuple-element(%p), index=1",
+            *body_mid,
+            f"  ROOT %out = {state} tuple(%i, %x)",
+            "}", "",
+            f"%{name}.cond (pc: {state}) -> pred[] {{",
+            f"  %pc = {state} parameter(0)",
+            f"  %ic = s32[] get-tuple-element(%pc), index=0",
+            f"  %lim = s32[] constant(0)",
+            f"  ROOT %lt = pred[] compare(%ic, %lim), direction=LT",
+            "}", "",
+        ])
+
+    n_dense = cfg.n_dense_layers if cfg.moe is not None else L
+    if n_dense:
+        layer_comp("dense_body", attn("a") + mlp("m", cfg.d_ff))
+    moe_layers = L - n_dense
+    if cfg.moe is not None and moe_layers:
+        m = cfg.moe
+        body = attn("a") + [
+            f"  %r.wg = {dtype}[{d},{m.n_experts}]{{1,0}} constant(0)",
+            f"  %r.gate = {dtype}[{T},{m.n_experts}]{{1,0}} dot(%x, "
+            f"%r.wg), lhs_contracting_dims={{1}}, "
+            f"rhs_contracting_dims={{0}}",
+        ] + mlp("e", m.d_expert, rows=m.top_k * T)
+        if m.n_shared_experts:
+            body += mlp("s", m.n_shared_experts * m.d_shared)
+        layer_comp("moe_body", body)
+
+    def while_line(out: str, name: str, trip: int) -> str:
+        return (f"  %{out} = {state} while(%init), "
+                f"condition=%{name}.cond, body=%{name}, "
+                f'backend_config={{"known_trip_count":{{"n":"{trip}"}}}}')
+
+    mb_mid = [f"  %init = {state} tuple(%i, %x)"]
+    if n_dense:
+        mb_mid.append(while_line("dense", "dense_body", n_dense))
+    if cfg.moe is not None and moe_layers:
+        mb_mid.append(while_line("moe", "moe_body", moe_layers))
+    mb_mid += [
+        f"  %wv = {dtype}[{d},{cfg.vocab_size}]{{1,0}} constant(0)",
+        f"  %logits = {dtype}[{T},{cfg.vocab_size}]{{1,0}} dot(%x, %wv), "
+        f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}",
+    ]
+    layer_comp("mb_body", mb_mid)
+
+    P = int(cfg.param_count())
+    lines.extend([
+        f"ENTRY %train_step.{cfg.name if hasattr(cfg, 'name') else 'lm'} "
+        f"(x0: {dtype}[{T},{d}]) -> {state} {{",
+        f"  %x0 = {dtype}[{T},{d}]{{1,0}} parameter(0)",
+        f"  %z = s32[] constant(0)",
+        f"  %init = {state} tuple(%z, %x0)",
+        f"  %mb = {state} while(%init), condition=%mb_body.cond, "
+        f"body=%mb_body, "
+        f'backend_config={{"known_trip_count":{{"n":"{microbatches}"}}}}',
+        f"  %grads = f32[{P}]{{0}} constant(0)",
+        f"  %gsync = f32[{P}]{{0}} all-reduce(%grads), to_apply=%mb_body",
+        f"  ROOT %res = {state} get-tuple-element(%mb), index=0",
+        "}",
+    ])
+    return "\n".join(lines)
+
+
 def flash_block_report(hlo_text: str) -> dict:
     """Identify flash-attention block bodies (innermost while bodies that
     contain an `exponential` fusion plus >=2 dots) and report:

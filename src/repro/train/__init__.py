@@ -1,5 +1,6 @@
+from repro.train.cosim import SyncCandidate, TrainSim, TrainStepSpec
 from repro.train.loop import Trainer, make_train_step
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
 __all__ = ["Trainer", "make_train_step", "AdamWConfig", "adamw_init",
-           "adamw_update"]
+           "adamw_update", "SyncCandidate", "TrainSim", "TrainStepSpec"]

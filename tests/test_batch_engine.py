@@ -216,7 +216,8 @@ def test_scenario_argument_validation():
     with pytest.raises(ValueError, match="disagrees on N"):
         MPI.run_program_scenarios(prog, compute_scale=np.ones(3),
                                   byte_scale=np.ones(4))
-    with pytest.raises(ValueError, match=r"\(N,\) or \(nranks, N\)"):
+    with pytest.raises(ValueError, match=r"\(N,\), \(nranks, N\) or "
+                                         r"\(n_computes, N\)"):
         MPI.run_program_scenarios(prog, compute_scale=np.ones((3, 2)))
 
 

@@ -1,0 +1,116 @@
+"""HLO cost-model coverage on real MoE/MLA configs (ISSUE-9 satellite).
+
+``synth_train_hlo`` emits a parser-compatible training-step module —
+nested whiles over the dense and MoE layer stacks inside a microbatch
+loop, per-layer attention/MLP/expert dots, an LM-head dot and a
+gradient all-reduce — and this file pins that ``analyze_hlo`` rolls it
+up correctly: per-layer flop/byte sanity bounds, ``_trip_multipliers``
+on the nested loops, and agreement with the closed-form
+``lm_train_step_cost`` anchor.
+"""
+
+import pytest
+
+from repro.configs import get
+from repro.roofline.analysis import lm_train_step_cost
+from repro.roofline.hlo_cost import (HloCostModel, _trip_multipliers,
+                                     analyze_hlo, synth_train_hlo)
+
+SEQ = 512
+
+
+def _analyzed(arch, *, microbatches=1):
+    cfg = get(arch)
+    hlo = synth_train_hlo(cfg, seq_len=SEQ, microbatches=microbatches)
+    return cfg, hlo, analyze_hlo(hlo)
+
+
+# ---------------------------------------------------- trip multipliers
+@pytest.mark.parametrize("arch,mb", [("deepseek-v3-671b", 2),
+                                     ("mistral-large-123b", 3)])
+def test_nested_trip_multipliers(arch, mb):
+    cfg, hlo, _ = _analyzed(arch, microbatches=mb)
+    mult = _trip_multipliers(HloCostModel(hlo))
+    assert mult["%mb_body"] == mb
+    if getattr(cfg, "moe", None):
+        n_dense = getattr(cfg, "n_dense_layers", 0) or 0
+        # nested whiles multiply: stack trips x microbatch trips
+        assert mult["%dense_body"] == n_dense * mb
+        assert mult["%moe_body"] == (cfg.n_layers - n_dense) * mb
+    else:
+        assert mult["%dense_body"] == cfg.n_layers * mb
+        assert "%moe_body" not in mult
+    # nested computation bodies never count as entry roots
+    assert all(v >= 1 for v in mult.values())
+
+
+def test_microbatch_near_invariance_of_totals():
+    """Splitting the batch over microbatches keeps the matmul flops
+    identical (same tokens, more loop iterations); only the attention
+    quadratic term shrinks (each microbatch attends within its own
+    seq/mb chunk), so totals drop slightly but never grow."""
+    _, _, one = _analyzed("mistral-large-123b", microbatches=1)
+    _, _, four = _analyzed("mistral-large-123b", microbatches=4)
+    assert four["flops"] <= one["flops"]
+    assert four["flops"] == pytest.approx(one["flops"], rel=0.02)
+
+
+# ------------------------------------------- closed-form cross anchors
+@pytest.mark.parametrize("arch,lo,hi", [("deepseek-v3-671b", 0.7, 1.3),
+                                        ("mistral-large-123b", 0.7, 1.3),
+                                        ("exanest-lm-100m", 0.6, 1.2)])
+def test_hlo_flops_track_closed_form(arch, lo, hi):
+    cfg, _, rep = _analyzed(arch)
+    closed = lm_train_step_cost(cfg, seq_len=SEQ, batch=1)
+    ratio = rep["flops"] / closed["fwd_flops"]
+    assert lo < ratio < hi, ratio
+
+
+def test_allreduce_bytes_are_fp32_gradient():
+    for arch in ("deepseek-v3-671b", "exanest-lm-100m"):
+        cfg, _, rep = _analyzed(arch)
+        coll = rep["collectives"]
+        assert coll["all-reduce"] == cfg.param_count() * 4
+        assert coll["ops"]["all-reduce"] == 1
+        assert coll["total"] == coll["all-reduce"]
+
+
+# -------------------------------------------- per-layer sanity bounds
+def test_moe_layer_flops_scale_with_active_params():
+    """A sparse MoE step must cost like its *active* parameter count,
+    nowhere near its total parameter count."""
+    cfg, _, rep = _analyzed("deepseek-v3-671b")
+    tokens = SEQ
+    dense_equiv = 2.0 * tokens * cfg.param_count()
+    active_equiv = 2.0 * tokens * cfg.active_param_count()
+    assert rep["flops"] < 0.5 * dense_equiv
+    assert rep["flops"] > 0.5 * active_equiv
+
+
+def test_dense_layer_flops_per_token_bounds():
+    """Dense model: per-token flops within [2P, 4P] — matmul lower
+    bound plus attention's quadratic term at modest sequence length."""
+    cfg, _, rep = _analyzed("mistral-large-123b")
+    per_tok = rep["flops"] / SEQ
+    p = cfg.param_count()
+    assert 2.0 * p * 0.9 < per_tok < 4.0 * p
+
+
+def test_bytes_are_positive_and_dominated_by_weights():
+    for arch in ("deepseek-v3-671b", "mistral-large-123b",
+                 "exanest-lm-100m"):
+        cfg, _, rep = _analyzed(arch)
+        assert rep["bytes"] > 0
+        # at seq 512 the weight traffic should dominate activations
+        assert rep["bytes"] > cfg.param_count()  # >= 1 byte/param touched
+
+
+def test_kv_projection_width_in_emitted_hlo():
+    """The kv dot's N dimension is 2*n_kv_heads*head_dim — and for a
+    GQA config that is strictly narrower than the q projection."""
+    for arch in ("deepseek-v3-671b", "exanest-lm-100m"):
+        cfg, hlo, _ = _analyzed(arch)
+        hd = cfg.resolved_head_dim
+        assert f"{2 * cfg.n_kv_heads * hd}]" in hlo
+    gqa = get("exanest-lm-100m")
+    assert gqa.n_kv_heads < gqa.n_heads

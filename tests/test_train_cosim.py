@@ -1,0 +1,226 @@
+"""Overlap-aware train-step co-simulation (DESIGN.md §2.9).
+
+Pins the ISSUE-9 contract: overlap is *emergent* from the event engine
+(strictly below the serialized sum, at or above the critical-path lower
+bound), the batched candidate-population lane agrees with the
+per-candidate lane to 1e-9, the same emission shows overlap through the
+TPU machine's analytic walk, and the simulated hillclimb flips at least
+one decision against the analytic ``CommPolicy`` baseline.  Also covers
+the nonblocking-collective seam's error paths and the memoized
+``grad_sync.cost_sync_program_s``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.machine import ExanetMachine, TpuMachine
+from repro.core.planner import CollectivePlanner
+from repro.core.program import (Collective, Compute, Program, ProgramError,
+                                Wait)
+from repro.train.cosim import SyncCandidate, TrainSim, TrainStepSpec
+
+SPEC = TrainStepSpec(arch="exanest-lm-100m", nranks=8, seq_len=256,
+                     rank_gflops=50.0)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return TrainSim(SPEC)
+
+
+# ----------------------------------------------------------- candidates
+def test_candidate_rejects_auto_algo():
+    with pytest.raises(ValueError, match="explicit algorithms"):
+        SyncCandidate(4, "auto")
+
+
+def test_candidate_rejects_split_mismatch():
+    with pytest.raises(ValueError, match="split fractions"):
+        SyncCandidate(4, "rabenseifner", split=(0.5, 0.5))
+
+
+def test_candidate_fractions_normalize():
+    c = SyncCandidate(2, "rabenseifner", split=(3.0, 1.0))
+    assert c.fractions() == (0.75, 0.25)
+    assert sum(SyncCandidate(5, "rabenseifner").fractions()) == \
+        pytest.approx(1.0)
+
+
+def test_family_saturates_depth_and_ignores_split():
+    a = SyncCandidate(4, "rabenseifner", 2)
+    b = SyncCandidate(4, "rabenseifner", 2, split=(0.4, 0.3, 0.2, 0.1))
+    assert a.family() == b.family()
+    # depth beyond the bucket count cannot change the op sequence
+    assert SyncCandidate(2, "rabenseifner", 7).family() == \
+        SyncCandidate(2, "rabenseifner", 2).family()
+    assert SyncCandidate(2, "rabenseifner", 0).family() != \
+        SyncCandidate(2, "rabenseifner", 1).family()
+
+
+# ------------------------------------------------------------- emission
+def test_emit_structure(sim):
+    blocking = sim.emit_step(SyncCandidate(3, "rabenseifner", 0))
+    row = blocking.rank_ops[0]
+    assert all(r == row for r in blocking.rank_ops)
+    colls = [op for op in row if isinstance(op, Collective)]
+    assert len(colls) == 3 and all(c.handle is None for c in colls)
+    assert not any(isinstance(op, Wait) for op in row)
+    assert sum(c.nbytes for c in colls) == pytest.approx(
+        sim.grad_bytes, rel=1e-6)
+
+    over = sim.emit_step(SyncCandidate(3, "rabenseifner", 2))
+    row = over.rank_ops[0]
+    colls = [op for op in row if isinstance(op, Collective)]
+    assert [c.handle for c in colls] == ["g0", "g1", "g2"]
+    waits = [op for op in row if isinstance(op, Wait)]
+    # bucket 2 drains bucket 0 in-line; the final Wait() drains the rest
+    assert [w.handles for w in waits] == [("g0",), None]
+    # [fwd, bwd_0..bwd_2, opt] compute slots per rank
+    assert sum(isinstance(op, Compute) for op in row) == 5
+
+
+def test_split_moves_payloads_not_structure(sim):
+    a = SyncCandidate(4, "rabenseifner", 1)
+    b = dataclasses.replace(a, split=(0.4, 0.3, 0.2, 0.1))
+    sa, sb = sim.emit_step(a), sim.emit_step(b)
+    ka = [type(op).__name__ for op in sa.rank_ops[0]]
+    kb = [type(op).__name__ for op in sb.rank_ops[0]]
+    assert ka == kb
+    assert sim.bucket_bytes(b)[0] > sim.bucket_bytes(a)[0]
+
+
+# ------------------------------------------------ batched fast path
+def test_batched_lane_matches_single_lane(sim):
+    cands = [SyncCandidate(4, "rabenseifner", 2),
+             SyncCandidate(4, "rabenseifner", 2,
+                           split=(0.4, 0.3, 0.2, 0.1)),
+             SyncCandidate(4, "rabenseifner", 0),
+             SyncCandidate(4, "recursive_doubling", 1)]
+    # check=2 re-runs sampled columns on the interpreter inside the
+    # scenario substrate (compiled==interp <= 1e-9 or raise)
+    us = sim.cost_candidates(cands, check=2, rtol=1e-9)
+    singles = np.array([sim.step_time_single(c) for c in cands])
+    rel = np.abs(us - singles) / singles
+    assert rel.max() <= 1e-9, rel
+    # the uneven split must actually change the step time
+    assert us[1] != us[0]
+
+
+def test_batched_lane_engine_numpy(sim):
+    cands = [SyncCandidate(2, "rabenseifner", 1),
+             SyncCandidate(2, "rabenseifner", 1, split=(0.7, 0.3))]
+    us = sim.cost_candidates(cands, engine="numpy", check=1)
+    assert np.all(us > 0) and us[0] != us[1]
+
+
+# ---------------------------------------------------- emergent overlap
+def test_overlap_emergent_between_bounds(sim):
+    cand = SyncCandidate(4, "rabenseifner", 2)
+    ov = sim.step_time_single(cand)
+    bl = sim.serialized_us(cand)
+    lb = sim.lower_bound_us(cand)
+    # strictly below the serialized sum, at/above the critical path
+    assert ov < bl
+    assert ov >= lb * (1 - 1e-9)
+
+
+def test_overlap_emerges_through_analytic_hooks(sim):
+    over = sim.step_time_analytic(SyncCandidate(4, "rabenseifner", 2))
+    block = sim.step_time_analytic(SyncCandidate(4, "rabenseifner", 0))
+    assert 0 < over < block
+
+
+# -------------------------------------------------------- planner flip
+def test_plan_train_sync_flips_analytic_baseline(sim):
+    plan = CollectivePlanner(sim.machine).plan_train_sync(
+        sim, generations=1, survivors=3, children=3, seed=0, check=1)
+    assert plan.baseline.overlap_depth == 0           # CommPolicy lane
+    assert plan.step_us <= plan.baseline_step_us
+    assert plan.flipped and plan.flip_kinds
+    assert plan.margin > 0.05
+    assert plan.evaluated >= len(sim.candidate_grid())
+    assert plan.arch == SPEC.arch and plan.nranks == SPEC.nranks
+
+
+def test_analytic_candidate_is_blocking_and_feasible(sim):
+    base = sim.analytic_candidate()
+    assert base.overlap_depth == 0 and base.split is None
+    assert base.algo in sim.feasible_algos()
+    assert 1 <= base.n_buckets <= 64
+
+
+# ------------------------------------------- async seam error paths
+def test_async_handle_reuse_raises(sim):
+    ops = (Collective("allreduce", 1024, "rabenseifner", handle="h"),
+           Collective("allreduce", 1024, "rabenseifner", handle="h"),
+           Wait())
+    prog = Program(tuple(ops for _ in range(4)))
+    with pytest.raises(ProgramError, match="reused"):
+        sim.machine._mpi_for(4).run_program(prog, backend="interp")
+
+
+def test_wait_unknown_handle_raises(sim):
+    ops = (Collective("allreduce", 1024, "rabenseifner", handle="h"),
+           Wait(("nope",)))
+    prog = Program(tuple(ops for _ in range(4)))
+    with pytest.raises(ProgramError, match="unknown handle"):
+        sim.machine._mpi_for(4).run_program(prog, backend="interp")
+
+
+def test_async_compiled_matches_interp(sim):
+    mpi = sim.machine._mpi_for(8)
+    ops = (Compute(us=50.0),
+           Collective("allreduce", 1 << 16, "recursive_doubling",
+                      handle="a"),
+           Compute(us=200.0),
+           Collective("allreduce", 1 << 14, "recursive_doubling",
+                      handle="b"),
+           Wait(("a",)),
+           Compute(us=25.0),
+           Wait())
+    prog = Program(tuple(ops for _ in range(8)))
+    ci = mpi.run_program(prog, backend="interp").latency_us
+    cc = mpi.run_program(prog, backend="compiled").latency_us
+    assert ci == pytest.approx(cc, rel=1e-9)
+
+
+# --------------------------------------- satellite: grad_sync memoization
+def test_cost_sync_program_memoized():
+    from repro.parallel import grad_sync as gs
+    gs.clear_sync_cost_cache()
+    m = ExanetMachine()
+    buckets = [1 << 20, 1 << 19]
+    a = gs.cost_sync_program_s(m, 8, buckets, compute_us_per_bucket=25.0)
+    info = gs.sync_cost_cache_info()
+    assert info["misses"] == 1 and info["hits"] == 0
+    b = gs.cost_sync_program_s(m, 8, buckets, compute_us_per_bucket=25.0)
+    info = gs.sync_cost_cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1 and a == b
+    # any key component change is a distinct entry
+    gs.cost_sync_program_s(m, 8, buckets, compute_us_per_bucket=25.0,
+                           overlap_depth=1)
+    gs.cost_sync_program_s(m, 8, buckets, compute_us_per_bucket=25.0,
+                           algo="recursive_doubling")
+    gs.cost_sync_program_s(TpuMachine(), 8, buckets,
+                           compute_us_per_bucket=25.0)
+    info = gs.sync_cost_cache_info()
+    assert info["misses"] == 4 and info["hits"] == 1
+    # cached values survive a re-query and match a cold recompute
+    gs.clear_sync_cost_cache()
+    assert gs.cost_sync_program_s(m, 8, buckets,
+                                  compute_us_per_bucket=25.0) == a
+    assert gs.sync_cost_cache_info()["size"] == 1
+
+
+def test_emit_sync_program_overlap_depth():
+    from repro.parallel.grad_sync import emit_sync_program
+    prog = emit_sync_program(4, [1 << 20] * 3, compute_us_per_bucket=10.0,
+                             overlap_depth=1)
+    row = prog.rank_ops[0]
+    handles = [op.handle for op in row if isinstance(op, Collective)]
+    assert handles == ["g0", "g1", "g2"]
+    assert any(isinstance(op, Wait) and op.handles == ("g0",)
+               for op in row)
+    assert isinstance(row[-1], Wait) and row[-1].handles is None
