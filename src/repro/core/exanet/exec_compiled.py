@@ -157,6 +157,13 @@ class _Level:
     dst_perm: np.ndarray | None
     dst_starts: np.ndarray | None
     udst: np.ndarray | None
+    # raw per-send link data (k, L) / (k,), -1/0-padded: lets a batched
+    # link-degradation axis (:class:`LinkDegrade`) recompute the derived
+    # constants per column at run time (DESIGN.md §2.10)
+    link_ids: np.ndarray | None = None
+    link_rate: np.ndarray | None = None
+    link_wire: np.ndarray | None = None
+    n_links: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -167,6 +174,103 @@ class _EagerRound:
     pktz: _Stage
     e_const: np.ndarray
     eager_pb: np.ndarray
+    # raw link data for the batched degradation axis (eager sends pay the
+    # per-link serialization + extra latency, but no stream/handshake)
+    link_ids: np.ndarray | None = None
+    link_rate: np.ndarray | None = None
+    n_links: np.ndarray | None = None
+
+
+class LinkDegrade:
+    """Per-(link, batch-column) degradation: the new binding axes of the
+    batched substrate (DESIGN.md §2.10).  ``slow``/``extra_us`` are
+    ``(n_resource_rows, N)`` arrays indexed by :meth:`Engine.resource_id`
+    LINK rows: ``slow`` divides a link's serialization rate and sustained
+    wire bandwidth (bandwidth-scale axis), ``extra_us`` adds per-link
+    one-way latency (latency axis).
+
+    At run time every level's derived constants are recomputed per column
+    with the *same formulas* ``Network.path_metrics`` uses — per-link
+    eager serialization summed, bottleneck wire bandwidth through the
+    §6.1.1 16KB-block RDMA formula, handshake/hop picking up the extra
+    latency — so an all-ones column is bit-identical to the undegraded
+    constants and the interpreter twin agrees to ~1e-9 under degradation.
+    Loopback sends (no links) are AXI-bound and keep their base constants.
+    """
+
+    def __init__(self, slow, extra_us, p):
+        self.slow = np.asarray(slow, dtype=np.float64)
+        self.extra = np.asarray(extra_us, dtype=np.float64)
+        if self.slow.shape != self.extra.shape:
+            raise ValueError(f"slow {self.slow.shape} != extra "
+                             f"{self.extra.shape}")
+        self.ncols = self.slow.shape[1]
+        self._block_bits = p.rdma_block_bytes * 8.0
+        self._gap_us = p.rdma_block_gap_us
+        self._cache: dict[int, dict] = {}
+
+    def column(self, j: int) -> "LinkDegrade":
+        """A one-column view (the per-binding reference lane)."""
+        return LinkDegrade(self.slow[:, j:j + 1], self.extra[:, j:j + 1],
+                           _ParamsView(self._block_bits, self._gap_us))
+
+    def consts(self, lv) -> dict:
+        """Recomputed per-column constants of one level (cached per level
+        object: levels are compile-time artifacts that outlive runs)."""
+        out = self._cache.get(id(lv))
+        if out is not None:
+            return out
+        ids = lv.link_ids
+        if ids is None or ids.size == 0:
+            out = {"e_const": lv.e_const, "eager_pb": lv.eager_pb}
+            if hasattr(lv, "handshake"):
+                out.update(handshake=lv.handshake, stream_pb=lv.stream_pb,
+                           hop=lv.hop)
+            self._cache[id(lv)] = out
+            return out
+        mask = ids >= 0                                    # (k, L)
+        idx = np.where(mask, ids, 0)
+        s = self.slow[idx]                                 # (k, L, N)
+        ex = np.where(mask[..., None], self.extra[idx], 0.0)
+        exsum = ex.sum(axis=1)                             # (k, N)
+        rate = np.where(mask[..., None], lv.link_rate[..., None], np.inf)
+        pb = 8.0 / ((rate / s) * 1000.0)   # exactly 0.0 on padding
+        has = (lv.n_links > 0)[:, None]
+        out = {"e_const": lv.e_const + exsum,
+               "eager_pb": np.where(has, pb.sum(axis=1), lv.eager_pb)}
+        if hasattr(lv, "handshake"):                       # full _Level
+            wire = np.where(mask[..., None],
+                            lv.link_wire[..., None] / s, np.inf)
+            wmin = wire.min(axis=1)                        # (k, N)
+            t_block = self._block_bits / (wmin * 1000.0) + self._gap_us
+            bw = self._block_bits / t_block / 1000.0
+            out["handshake"] = lv.handshake + 2.0 * exsum
+            out["stream_pb"] = np.where(has, 8.0 / (bw * 1000.0),
+                                        lv.stream_pb)
+            out["hop"] = lv.hop + exsum
+        self._cache[id(lv)] = out
+        return out
+
+
+@dataclasses.dataclass
+class _ParamsView:
+    """The two HwParams fields :class:`LinkDegrade` needs, for views."""
+    _block_bits: float
+    _gap_us: float
+
+    @property
+    def rdma_block_bytes(self) -> float:
+        return self._block_bits / 8.0
+
+    @property
+    def rdma_block_gap_us(self) -> float:
+        return self._gap_us
+
+
+def _deg_col(a: np.ndarray, cols) -> np.ndarray:
+    """Column-subset a degraded (k, N) constant; (k, 1) arrays broadcast
+    over any subset and pass through untouched."""
+    return a if cols is None or a.shape[1] == 1 else a[:, cols]
 
 
 @dataclasses.dataclass
@@ -306,6 +410,7 @@ class VecTransport:
     def _init_transport(self, p):
         self._p = p
         self._eng = NUMPY     # scan engine; rebound per run (engine=)
+        self._deg = None      # LinkDegrade axis; rebound per run (deg=)
         self._eager_max = p.mpi_eager_max_bytes
         self._pktz_occ = p.pktz_occupancy_us
         self._pktz_ret = p.pktz_occupancy_us + p.a53_call_overhead_us
@@ -368,6 +473,12 @@ class VecTransport:
 
     def _run_eager(self, state, lv, t_issue, nbl, act, cols):
         """The packetizer/mailbox transport: (complete, sender_free)."""
+        if self._deg is None:
+            e_const, eager_pb = lv.e_const, lv.eager_pb
+        else:
+            c = self._deg.consts(lv)
+            e_const = _deg_col(c["e_const"], cols)
+            eager_pb = _deg_col(c["eager_pb"], cols)
         st = lv.pktz
         r = self._stage_acquire(state, st, t_issue, self._pktz_occ, act,
                                 True, cols)
@@ -376,14 +487,24 @@ class VecTransport:
         else:
             dep = np.empty(t_issue.shape)
             dep[st.sperm] = r
-        comp = dep + lv.e_const + nbl * lv.eager_pb
+        comp = dep + e_const + nbl * eager_pb
         return comp, dep + self._pktz_ret
 
     def _run_rdv(self, state, lv, t_issue, nbl, act, cols, uni):
         """The RTS/CTS + RDMA transport: (complete, complete)."""
-        stream = nbl * lv.stream_pb
+        if self._deg is None:
+            handshake, stream_pb, hop = lv.handshake, lv.stream_pb, lv.hop
+        else:
+            # per-column constants: the group-constant-duration fast path
+            # no longer applies, force the exact max-plus general path
+            c = self._deg.consts(lv)
+            handshake = _deg_col(c["handshake"], cols)
+            stream_pb = _deg_col(c["stream_pb"], cols)
+            hop = _deg_col(c["hop"], cols)
+            uni = False
+        stream = nbl * stream_pb
         st = lv.r5
-        r = self._stage_acquire(state, st, t_issue + lv.handshake,
+        r = self._stage_acquire(state, st, t_issue + handshake,
                                 self._r5_occ, act, True, cols)
         if st.sperm is None:
             cur = r + self._rdma_startup
@@ -409,7 +530,7 @@ class VecTransport:
             s0 = self._stage_acquire(state, st, cur, stream, act,
                                      uni and st.pb_uniform, cols)
             occupied[st.sperm] = s0 + stream[st.sperm]
-        comp = occupied + lv.hop
+        comp = occupied + hop
         return comp, comp
 
 
@@ -499,14 +620,20 @@ class RoundProgram(VecTransport):
                 ddst=_make_stage(ddst_sub, pm["dma_dst_id"][sel[ddst_sub]],
                                  spb[ddst_sub]),
                 src_ranks=src_ranks, dst_perm=dperm, dst_starts=dstarts,
-                udst=udst))
+                udst=udst,
+                link_ids=link_rows[sel],
+                link_rate=pm["link_rate_gbps"][sel],
+                link_wire=pm["link_wire_gbps"][sel],
+                n_links=n_links[sel]))
 
         out = _LoweredRound(src=src, dst=dst, exchange=rnd.exchange,
                             sync=rnd.sync, levels=levels)
         if rnd.exchange:
             out.eager = _EagerRound(
                 _make_stage(np.arange(n), pm["pktz_id"], span=n),
-                e_const[:, None], pm["eager_wire_us_per_byte"][:, None])
+                e_const[:, None], pm["eager_wire_us_per_byte"][:, None],
+                link_ids=link_rows, link_rate=pm["link_rate_gbps"],
+                n_links=n_links)
             out.src_perm, out.src_starts, out.usrc = _dst_grouping(src)
             out.dst_perm, out.dst_starts, out.udst = _dst_grouping(dst)
             out.participants = np.unique(np.concatenate([src, dst]))
@@ -732,8 +859,9 @@ class RoundProgram(VecTransport):
                 np.where(rdvl, sfree_r, sfree_e))
 
     def run(self, sched, sizes, *, state: ResourceState | None = None,
-            t0: np.ndarray | None = None,
-            engine=None, cache_bind: bool = True) -> BatchScheduleResult:
+            t0: np.ndarray | None = None, engine=None,
+            deg: LinkDegrade | None = None,
+            cache_bind: bool = True) -> BatchScheduleResult:
         """Execute the program over a message-size grid in one batch.
 
         ``state``/``t0`` serve *embedded* execution inside a compiled
@@ -749,11 +877,16 @@ class RoundProgram(VecTransport):
         a repeated-size grid.
 
         ``engine`` selects the scan backend (``"numpy"`` default,
-        ``"jax"``, or an engine object; DESIGN.md §2.5).
+        ``"jax"``, or an engine object; DESIGN.md §2.5).  ``deg`` binds
+        the per-(link, column) degradation axes (:class:`LinkDegrade`) —
+        one batched replay sweeps N fault/congestion scenarios.
         """
         self._eng = resolve_engine(engine)
+        self._deg = deg
         bound = self.bind(sched, sizes, cache_bind)
         B = len(bound.sizes)
+        if deg is not None and deg.ncols not in (1, B):
+            raise ValueError(f"deg has {deg.ncols} columns, batch has {B}")
         p = self._p
         if state is None:
             state = ResourceState(self.n_rows, B)

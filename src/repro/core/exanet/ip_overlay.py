@@ -9,6 +9,7 @@ network reached through the Network-MPSoC software bridge.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.exanet.network import Network
 from repro.core.exanet.params import DEFAULT, HwParams
@@ -54,13 +55,38 @@ def baseline_throughput_gbps(pkt_bytes: int, params: HwParams = DEFAULT,
     """10GbE management path through the Network-MPSoC software bridge
     (§3.3): large datagrams fragment at the 1500B MTU and every fragment
     crosses the kernel stack plus the software bridge — CPU bound."""
-    import math
     frags = max(1, math.ceil(pkt_bytes / mtu))
     cpu_us_per_frag = params.tun_syscall_us + \
         mtu / (1.5 * params.a53_copy_bw_bytes_per_us) * 2.0
     wire_us = pkt_bytes * 8.0 / (10.0 * 1000.0)
     per_pkt = max(frags * cpu_us_per_frag, wire_us)
     return pkt_bytes * 8.0 / (per_pkt * 1000.0)
+
+
+def overlay_vs_native_gap(pkt_bytes: int = 65536,
+                          params: HwParams = DEFAULT) -> dict:
+    """The §5.3 throughput ladder on the paper's 5-hop path: native wire
+    bandwidth (what RDMA sustains), the IP overlay (CPU-taxed tunnel),
+    and the 10GbE software-bridge baseline — each in Gb/s, plus their
+    ratios.  The faults sweep reads this as the *graceful-degradation
+    floor*: a degraded fabric that still beats ``overlay_gbps`` keeps
+    native transport worthwhile; below ``baseline_gbps`` the converged
+    fabric has lost to the management network and the machine is
+    effectively partitioned for HPC traffic."""
+    topo = Topology(params)
+    net = Network(topo, params)
+    src, dst = topo._inter_mezz_312()
+    native = net.path_wire_bw_gbps(topo.route(src, dst))
+    overlay = overlay_throughput_gbps(pkt_bytes, params)
+    baseline = baseline_throughput_gbps(pkt_bytes, params)
+    return {
+        "pkt_bytes": pkt_bytes,
+        "native_wire_gbps": native,
+        "overlay_gbps": overlay,
+        "baseline_gbps": baseline,
+        "overlay_vs_native": overlay / native,
+        "overlay_vs_baseline": overlay / baseline,
+    }
 
 
 def overlay_rtt(params: HwParams = DEFAULT, *, mode: str = "poll") -> float:

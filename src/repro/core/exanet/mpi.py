@@ -66,16 +66,25 @@ class ScheduleResult:
 class ExanetMPI:
     def __init__(self, params: HwParams = DEFAULT, *,
                  ranks_per_mpsoc: int | None = None, trace: bool = False,
-                 cache: bool = True):
+                 cache: bool = True, faults=None):
         """``cache=False`` disables both the route cache and the engine's
         path table — the pre-refactor per-send ``route()`` behaviour, kept
-        for the collectives_sweep speedup benchmark."""
+        for the collectives_sweep speedup benchmark.  ``faults`` takes a
+        :class:`repro.core.exanet.faults.FaultSpec`: routes become
+        fault-aware and every latency constant picks up the static
+        degradation (DESIGN.md §2.10)."""
         self.p = params
-        self.topo = Topology(params) if cache else \
-            Topology(params, route_cache_size=0)
+        self.topo = Topology(params, faults=faults) if cache else \
+            Topology(params, route_cache_size=0, faults=faults)
         self.net = Network(self.topo, params,
                            engine=sim.Engine(trace=trace, cache_paths=cache))
         self._rpm = ranks_per_mpsoc
+
+    @property
+    def faults(self):
+        """The static :class:`FaultSpec` this machine instance carries
+        (None when healthy)."""
+        return self.topo.faults
 
     # --------------------------------------------------------- rank placement
     def rank_core(self, rank: int) -> int:
@@ -690,8 +699,69 @@ class ExanetMPI:
                                               engine=engine)
         return out
 
+    def _norm_link_axis(self, ax, name: str):
+        """Normalize a per-link scenario axis to {undirected key: (N,)}.
+        Accepts an (N,) array (applies to *every* physical link) or a
+        mapping ``{(kind, a, b): (N,)}`` (directed tuples normalized)."""
+        from repro.core.exanet import faults as _faults
+        if ax is None:
+            return None
+        if hasattr(ax, "items"):
+            out = {}
+            for k, v in ax.items():
+                v = np.asarray(v, dtype=np.float64)
+                if v.ndim != 1:
+                    raise ValueError(f"{name}[{k}] must be (N,); got "
+                                     f"shape {v.shape}")
+                out[_faults.link_key(*k)] = v
+            return out or None
+        arr = np.asarray(ax, dtype=np.float64)
+        if arr.ndim != 1:
+            raise ValueError(f"{name} must be (N,) or a per-link mapping; "
+                             f"got shape {arr.shape}")
+        return {k: arr for k in _faults.all_link_keys(self.topo)}
+
+    def _link_degrade(self, slow_map, extra_map, N):
+        """Build the :class:`LinkDegrade` run-time axis: (n_resource_rows,
+        N) slowdown/extra-latency arrays indexed by the engine's directed
+        LINK resource ids (an undirected fault key hits both directions).
+        Must run *after* the artifact compiles so every routed link has
+        its id registered."""
+        from repro.core.exanet.exec_compiled import LinkDegrade
+        from repro.core.exanet import faults as _faults
+        R = self.net.engine.n_resource_ids
+        slow = np.ones((R, N))
+        extra = np.zeros((R, N))
+        for ident, rid in self.net.engine.resource_ids_of(sim.LINK).items():
+            key = _faults.link_key(*ident)
+            if slow_map and key in slow_map:
+                slow[rid] = slow_map[key]
+            if extra_map and key in extra_map:
+                extra[rid] = extra_map[key]
+        return LinkDegrade(slow, extra, self.p)
+
+    def _column_fault_spec(self, slow_map, extra_map, b: int):
+        """The static FaultSpec equivalent of scenario column ``b`` of the
+        link axes, merged over this machine's own faults — the
+        interpreter-twin reference lane of the batched degradation."""
+        from repro.core.exanet import faults as _faults
+        base = self.topo.faults or _faults.HEALTHY
+        slow = {k: base.link_slow(*k) for k in base.degraded_link_keys()}
+        extra = {k: base.link_extra_us(*k)
+                 for k in base.degraded_link_keys()}
+        for k, v in (slow_map or {}).items():
+            slow[k] = slow.get(k, 1.0) * float(v[b])
+        for k, v in (extra_map or {}).items():
+            extra[k] = extra.get(k, 0.0) + float(v[b])
+        return _faults.FaultSpec(
+            dead_links=base.dead_links, dead_mpsocs=base.dead_mpsocs,
+            slow_links={k: f for k, f in slow.items() if f != 1.0},
+            link_extra_latency_us={k: e for k, e in extra.items() if e},
+            slow_ranks=base.slow_ranks)
+
     def run_program_scenarios(self, prog, *, compute_scale=None,
                               byte_scale=None, site_scale=None,
+                              link_scale=None, link_latency_us=None,
                               t0=None, plans: dict | None = None,
                               engine=None, check: int = 0,
                               rtol: float = 1e-9) -> list:
@@ -720,17 +790,46 @@ class ExanetMPI:
         ``rtol`` relative — the guard for builders whose scheduling
         order is *not* payload-invariant.
 
+        ``link_scale`` / ``link_latency_us`` are the degradation axes
+        (DESIGN.md §2.10): an (N,) array applies to every physical link,
+        a ``{(kind, a, b): (N,)}`` mapping degrades chosen links
+        (undirected — both directions are hit).  ``link_scale`` divides
+        per-link serialization rate and sustained wire bandwidth
+        (factors >= 1; a §4.5.3 lossy link with block-loss probability
+        ``p`` is the factor ``1/(1-p)``); ``link_latency_us`` adds
+        per-link one-way latency.  N sampled fault sets x load points
+        cost one replay; checked columns run against a statically
+        degraded interpreter twin (:class:`FaultSpec` merged over this
+        machine's own faults).
+
         Returns N :class:`~repro.core.program.ProgramResult`\\ s.
         """
         from repro.core.exanet.program_compiled import (extract_data,
                                                         rebind_program)
         base = extract_data(prog)
+        slow_map = self._norm_link_axis(link_scale, "link_scale")
+        extra_map = self._norm_link_axis(link_latency_us, "link_latency_us")
+        if slow_map:
+            for k, v in slow_map.items():
+                if (v < 1.0).any():
+                    raise ValueError(
+                        f"link_scale[{k}] has factors < 1 (a speedup); "
+                        "degradation factors must be >= 1")
         N = None
         for nm, a in (("compute_scale", compute_scale),
                       ("byte_scale", byte_scale),
-                      ("site_scale", site_scale), ("t0", t0)):
+                      ("site_scale", site_scale), ("t0", t0),
+                      ("link_scale", slow_map),
+                      ("link_latency_us", extra_map)):
             if a is not None:
-                n = np.asarray(a).shape[-1]
+                if isinstance(a, dict):
+                    n = len(next(iter(a.values())))
+                    bad = {k: len(v) for k, v in a.items() if len(v) != n}
+                    if bad:
+                        raise ValueError(f"{nm} values disagree on N: "
+                                         f"{bad} vs {n}")
+                else:
+                    n = np.asarray(a).shape[-1]
                 if N is None:
                     N = n
                 elif n != N:
@@ -738,7 +837,7 @@ class ExanetMPI:
         if N is None:
             raise ValueError(
                 "give at least one of compute_scale / byte_scale / "
-                "site_scale / t0")
+                "site_scale / link_scale / link_latency_us / t0")
         comp_cols = post_cols = site_cols = t0_cols = None
         base_comp = np.array(base[0], dtype=np.float64)
         base_post = np.array(base[1], dtype=np.float64)
@@ -790,9 +889,9 @@ class ExanetMPI:
                     f"t0 must be (nranks, N); got {t0_cols.shape} for "
                     f"nranks={prog.nranks}, N={N}")
         if (comp_cols is None and post_cols is None and site_cols is None
-                and t0_cols is not None):
-            # t0-only sweep: bind_arrays infers N from payload arrays, so
-            # hold one of them constant across the N columns explicitly
+                and (t0_cols is not None or slow_map or extra_map)):
+            # t0-/link-only sweep: bind_arrays infers N from payload
+            # arrays, so hold one of them constant across the N columns
             if len(base_comp):
                 comp_cols = np.broadcast_to(
                     base_comp[:, None], (len(base_comp), N))
@@ -808,11 +907,26 @@ class ExanetMPI:
         bound = art.bind_arrays(prog, compute_us=comp_cols,
                                 post_nbytes=post_cols,
                                 site_nbytes=site_cols, plans=plans)
-        results = art.run(bound, engine=engine, t0=t0_cols)
+        # build the degradation AFTER binding: the bind's probe is what
+        # allocates the engine's LINK resource ids on a cold artifact
+        deg = self._link_degrade(slow_map, extra_map, N) \
+            if (slow_map or extra_map) else None
+        results = art.run(bound, engine=engine, t0=t0_cols, deg=deg)
         if check > 0:
             cols = np.unique(np.linspace(0, N - 1, min(int(check), N))
                              .astype(np.int64))
+            twins: dict = {}
             for b in cols:
+                ref_mpi = self
+                if deg is not None:
+                    # link degradation cannot be rebound into a Program:
+                    # the reference lane is a statically degraded machine
+                    spec = self._column_fault_spec(slow_map, extra_map,
+                                                   int(b))
+                    ref_mpi = twins.get(spec)
+                    if ref_mpi is None:
+                        ref_mpi = twins[spec] = ExanetMPI(
+                            self.p, ranks_per_mpsoc=self._rpm, faults=spec)
                 pb = rebind_program(
                     prog,
                     compute_us=None if comp_cols is None
@@ -821,9 +935,9 @@ class ExanetMPI:
                     else post_cols[:, b],
                     site_nbytes=None if site_cols is None
                     else site_cols[:, b])
-                ref = self.run_program(pb, plans=plans, backend="interp",
-                                       t0=None if t0_cols is None
-                                       else t0_cols[:, b])
+                ref = ref_mpi.run_program(pb, plans=plans, backend="interp",
+                                          t0=None if t0_cols is None
+                                          else t0_cols[:, b])
                 err = abs(results[b].latency_us - ref.latency_us) / \
                     max(abs(ref.latency_us), 1e-30)
                 if err > rtol:

@@ -87,6 +87,26 @@ class Network:
         return (self.p.bw_wire_intra_qfdb_gbps if kind == INTRA_QFDB
                 else self.p.bw_wire_mezz_gbps)
 
+    # ------------------------------------------- static fault degradation
+    # A FaultSpec on the topology (DESIGN.md §2.10) rescales individual
+    # links: hot/lossy links divide the raw and sustained rates by the
+    # combined slowdown, degraded serdes adds per-link latency.  The
+    # healthy path is bit-identical (slow == 1.0, extra == 0.0).
+    def _link_slow(self, l) -> float:
+        f = self.topo.faults
+        return 1.0 if f is None else f.link_slow(l.kind, l.src_mpsoc,
+                                                 l.dst_mpsoc)
+
+    def link_eff_rate_gbps(self, l) -> float:
+        """Raw serialization rate of one routed link under the active
+        fault set."""
+        return self.link_rate_gbps(l.kind) / self._link_slow(l)
+
+    def link_eff_wire_bw_gbps(self, l) -> float:
+        """Sustained wire bandwidth of one routed link under the active
+        fault set."""
+        return self.link_wire_bw_gbps(l.kind) / self._link_slow(l)
+
     def path_wire_bw_gbps(self, path: Path) -> float:
         """Bottleneck sustained wire bandwidth along a path; intra-MPSoC
         transfers are bounded by the AXI read channel (19.2 Gb/s) times the
@@ -94,7 +114,7 @@ class Network:
         if not path.links:
             return self.p.axi_bw_gbps * (self.p.bw_wire_intra_qfdb_gbps
                                          / self.p.rate_intra_qfdb_gbps)
-        return min(self.link_wire_bw_gbps(l.kind) for l in path.links)
+        return min(self.link_eff_wire_bw_gbps(l) for l in path.links)
 
     def rdma_single_stream_bw_gbps(self, path: Path) -> float:
         """Effective in-message RDMA bandwidth: wire bandwidth degraded by the
@@ -112,6 +132,10 @@ class Network:
         # local input-queued switch at every FPGA entry that is not an
         # ExaNet router traversal (intra-QFDB hops)
         t += path.n_intra_qfdb_links * self.p.local_switch_latency_us
+        f = self.topo.faults
+        if f is not None:
+            t += sum(f.link_extra_us(l.kind, l.src_mpsoc, l.dst_mpsoc)
+                     for l in path.links)
         return t
 
     # --------------------------------------------------- closed-form latency
@@ -128,7 +152,7 @@ class Network:
         wire_bytes = size
         t = base + self._path_hop_latency(path)
         for l in path.links:
-            t += wire_bytes * 8.0 / (self.link_rate_gbps(l.kind) * 1000.0)
+            t += wire_bytes * 8.0 / (self.link_eff_rate_gbps(l) * 1000.0)
         return t
 
     def rdv_latency(self, size: int, path: Path, *, one_way: bool = False) -> float:
@@ -198,7 +222,7 @@ class Network:
         sm = self.topo.core_to_mpsoc(src_core)
         dm = self.topo.core_to_mpsoc(dst_core)
         hop = self._path_hop_latency(path)
-        per_byte = sum(8.0 / (self.link_rate_gbps(l.kind) * 1000.0)
+        per_byte = sum(8.0 / (self.link_eff_rate_gbps(l) * 1000.0)
                        for l in path.links)
         rdma_bw = self.rdma_single_stream_bw_gbps(path)
         m = PathMetrics(
@@ -234,9 +258,17 @@ class Network:
         rid = self.engine.resource_id
         max_links = max((len(m.link_res) for m in ms), default=0)
         link_ids = np.full((n, max_links), -1, dtype=np.int64)
+        # per-link effective rates (static faults applied), 0-padded like
+        # link_ids: the batched link-degradation axes of the compiled
+        # executor recompute per-column constants from these with the
+        # exact per-path formulas above (exec_compiled.LinkDegrade)
+        link_rate = np.zeros((n, max_links))
+        link_wire = np.zeros((n, max_links))
         for i, m in enumerate(ms):
             for k, l in enumerate(m.path.links):
                 link_ids[i, k] = rid(sim.LINK, l.key)
+                link_rate[i, k] = self.link_eff_rate_gbps(l)
+                link_wire[i, k] = self.link_eff_wire_bw_gbps(l)
         return {
             "hop_latency_us": np.array([m.hop_latency_us for m in ms]),
             "eager_wire_us_per_byte": np.array(
@@ -254,6 +286,8 @@ class Network:
                 [rid(sim.DMA, m.dst_mpsoc) if m.dma_dst is not None else -1
                  for m in ms]),
             "link_ids": link_ids,
+            "link_rate_gbps": link_rate,
+            "link_wire_gbps": link_wire,
             "n_links": np.array([len(m.link_res) for m in ms]),
         }
 

@@ -643,7 +643,11 @@ class CompiledProgram(VecTransport):
             links=[s for s in link_stages if s is not None],
             ddst=_make_stage(ddst_sub, pm["dma_dst_id"][idx[ddst_sub]],
                              spb[ddst_sub]),
-            src_ranks=None, dst_perm=None, dst_starts=None, udst=None)
+            src_ranks=None, dst_perm=None, dst_starts=None, udst=None,
+            link_ids=pm["link_ids"][idx],
+            link_rate=pm["link_rate_gbps"][idx],
+            link_wire=pm["link_wire_gbps"][idx],
+            n_links=n_links)
         send_post = np.array([st.events[e][0] for e in evs], dtype=np.int64)
         recv_post = np.array([st.events[e][1] for e in evs], dtype=np.int64)
         return _PLevel(
@@ -914,8 +918,8 @@ class CompiledProgram(VecTransport):
                         b_levels, site_sizes, coll_entry_off)
 
     # ------------------------------------------------------------ execution
-    def run(self, bound: _BoundIR, *, engine=None,
-            t0=None) -> list[ProgramResult]:
+    def run(self, bound: _BoundIR, *, engine=None, t0=None,
+            deg=None) -> list[ProgramResult]:
         """Replay the bound columns; one :class:`ProgramResult` each.
         ``engine`` selects the scan backend (``"numpy"`` default,
         ``"jax"``, or an engine object; DESIGN.md §2.5) — collective
@@ -928,10 +932,18 @@ class CompiledProgram(VecTransport):
         just a shifted first segment).  Like payload perturbations, the
         columns share the base probe tape; skews large enough to reorder
         the scheduler's firing are the cross-check's (``check=``) job to
-        catch."""
+        catch.
+
+        ``deg`` binds the per-(link, column) degradation axes
+        (:class:`~repro.core.exanet.exec_compiled.LinkDegrade`): every
+        p2p level and spliced collective recomputes its link-derived
+        constants per column (DESIGN.md §2.10)."""
         self._eng = resolve_engine(engine)
+        self._deg = deg
         st = self._static
         B = bound.B
+        if deg is not None and deg.ncols not in (1, B):
+            raise ValueError(f"deg has {deg.ncols} columns, batch has {B}")
         lowered = bound.lowered
         state = ResourceState(lowered.n_rows, B)
         C = np.zeros((st.n_segs, B))
@@ -1019,7 +1031,7 @@ class CompiledProgram(VecTransport):
         else:
             rp, sched = slot.rp, slot.sched
             res = rp.run(sched, sizes, state=state, t0=enters,
-                         engine=self._eng)
+                         engine=self._eng, deg=self._deg)
             b = rp.bind(sched, sizes)
             exits = res.clocks.T + b.post_copy_us[None, :] + \
                 self._p.barrier_exit_us

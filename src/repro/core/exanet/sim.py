@@ -143,6 +143,13 @@ class Engine:
     def n_resource_ids(self) -> int:
         return len(self._resource_ids)
 
+    def resource_ids_of(self, kind: str) -> dict:
+        """ident -> dense id for every registered resource of ``kind``
+        (the degradation axes map undirected physical-link keys onto the
+        directed LINK rows of the compiled executors)."""
+        return {ident: rid for (k, ident), rid in self._resource_ids.items()
+                if k == kind}
+
     def reset(self) -> None:
         # zero in place (don't clear): PathMetrics entries hold direct
         # references to these Resource objects across collectives

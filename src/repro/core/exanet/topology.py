@@ -19,9 +19,12 @@ QFDB boundary, >=4 crosses an MPSoC boundary).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
 
+from repro.core.exanet.faults import FaultSpec, UnroutableError
 from repro.core.exanet.params import DEFAULT, HwParams
+
+__all__ = ["Topology", "Link", "Path", "UnroutableError",
+           "INTRA_QFDB", "MEZZ", "LOOPBACK"]
 
 #: link classes
 INTRA_QFDB = "intra_qfdb"  # 16 Gb/s GTH inside a QFDB
@@ -78,7 +81,8 @@ class Path:
 
 class Topology:
     def __init__(self, params: HwParams = DEFAULT, *,
-                 route_cache_size: int = 1 << 16):
+                 route_cache_size: int = 1 << 16,
+                 faults: FaultSpec | None = None):
         self.p = params
         self.cores_per_mpsoc = params.cores_per_mpsoc
         self.fpgas_per_qfdb = params.fpgas_per_qfdb
@@ -103,6 +107,41 @@ class Topology:
         self._route_cache_size = route_cache_size
         self.route_hits = 0
         self.route_misses = 0
+        #: active fault set (None == healthy); routes are computed against
+        #: it, so the cache must never mix entries from different specs —
+        #: :meth:`set_faults` bumps the epoch and clears the cache.
+        self.faults: FaultSpec | None = \
+            None if faults is None or faults.is_empty else faults
+        self.fault_epoch = 0
+
+    # --------------------------------------------------------- fault state
+    def set_faults(self, faults: FaultSpec | None) -> None:
+        """Install a new fault set: bumps :attr:`fault_epoch` and clears
+        the route cache (cached paths belong to the previous epoch).
+        Callers holding derived path state — the engine's
+        ``path_table``, compiled round programs — must rebuild it; the
+        supported pattern is a fresh degraded ``ExanetMPI``/machine per
+        fault signature (DESIGN.md §2.10)."""
+        self.faults = None if faults is None or faults.is_empty else faults
+        self.fault_epoch += 1
+        self.route_cache_clear(reset_counters=False)
+
+    # ------------------------------------------------------- cache control
+    def route_cache_info(self) -> dict:
+        """Route-cache counters, mirroring ``sync_cost_cache_info`` and
+        the planner's ``cache_info()``."""
+        total = self.route_hits + self.route_misses
+        return {"hits": self.route_hits, "misses": self.route_misses,
+                "size": len(self._route_cache),
+                "max_size": self._route_cache_size,
+                "hit_rate": self.route_hits / total if total else 0.0,
+                "fault_epoch": self.fault_epoch}
+
+    def route_cache_clear(self, *, reset_counters: bool = True) -> None:
+        self._route_cache.clear()
+        if reset_counters:
+            self.route_hits = 0
+            self.route_misses = 0
 
     # ------------------------------------------------------------ id helpers
     def core_to_mpsoc(self, core: int) -> int:
@@ -131,19 +170,6 @@ class Topology:
         return qfdb * self.fpgas_per_qfdb
 
     # --------------------------------------------------------------- routing
-    @staticmethod
-    def _ring_steps(a: int, b: int, size: int) -> Iterator[int]:
-        """Dimension-ordered steps from coordinate a to b on a ring."""
-        if a == b:
-            return
-        fwd = (b - a) % size
-        bwd = (a - b) % size
-        step = 1 if fwd <= bwd else -1
-        cur = a
-        while cur != b:
-            cur = (cur + step) % size
-            yield cur
-
     def route(self, src_core: int, dst_core: int) -> Path:
         """Cached dimension-ordered route (see :meth:`_compute_route`)."""
         if src_core >= self.n_cores or dst_core >= self.n_cores or \
@@ -170,6 +196,64 @@ class Topology:
         self._route_cache[key] = path
         return path
 
+    def _intra_qfdb_hop(self, a: int, b: int) -> list[Link]:
+        """Links from MPSoC ``a`` to ``b`` inside one QFDB: the direct
+        crossbar pair, or — when that link is dead — a deterministic relay
+        through the lowest-id alive MPSoC with two healthy legs."""
+        f = self.faults
+        if f is None or not f.degrades_structure \
+                or not f.is_dead_link(INTRA_QFDB, a, b):
+            return [Link(INTRA_QFDB, a, b)]
+        base = self.mpsoc_to_qfdb(a) * self.fpgas_per_qfdb
+        for m in range(base, base + self.fpgas_per_qfdb):
+            if m in (a, b) or f.is_dead_mpsoc(m):
+                continue
+            if not f.is_dead_link(INTRA_QFDB, a, m) \
+                    and not f.is_dead_link(INTRA_QFDB, m, b):
+                return [Link(INTRA_QFDB, a, m), Link(INTRA_QFDB, m, b)]
+        raise UnroutableError(
+            f"intra-QFDB crossbar link ({a}, {b}) is dead in QFDB "
+            f"{self.mpsoc_to_qfdb(a)} and no alive relay MPSoC has two "
+            f"healthy legs — the pair is disconnected")
+
+    def _ring_hops(self, cur: tuple[int, int, int], dim: int, target: int,
+                   size: int) -> list[tuple[int, int, int]]:
+        """Coordinate hops along one torus ring, fault-aware: the healthy
+        (minimal, tie -> +1) direction is preferred; if it traverses a
+        dead mezzanine link or a QFDB whose Network MPSoC is dead, the
+        opposite direction is taken deterministically.  Both directions
+        cut -> :exc:`UnroutableError` naming the dimension."""
+        a = cur[dim]
+        if a == target:
+            return []
+        fwd, bwd = (target - a) % size, (a - target) % size
+        pref = 1 if fwd <= bwd else -1
+        f = self.faults
+        dirs = (pref,) if f is None or not f.degrades_structure \
+            else (pref, -pref)
+        for step in dirs:
+            hops: list[tuple[int, int, int]] = []
+            c = list(cur)
+            prev_net = self.network_mpsoc(self.coords_to_qfdb(*cur))
+            ok = True
+            while c[dim] != target:
+                c[dim] = (c[dim] + step) % size
+                net = self.network_mpsoc(self.coords_to_qfdb(*c))
+                if f is not None and (f.is_dead_mpsoc(net)
+                                      or f.is_dead_link(MEZZ, prev_net,
+                                                        net)):
+                    ok = False
+                    break
+                hops.append(tuple(c))
+                prev_net = net
+            if ok:
+                return hops
+        raise UnroutableError(
+            f"torus ring {'XYZ'[dim]} (size {size}) is cut between "
+            f"coordinates {a} and {target}: both ring directions traverse "
+            f"a dead mezzanine link or a dead Network MPSoC — the fault "
+            f"set partitions the machine")
+
     def _compute_route(self, src_core: int, dst_core: int) -> Path:
         """Dimension-ordered route; returns the link sequence + router count.
 
@@ -177,46 +261,61 @@ class Topology:
         router, then one router per intermediate/destination QFDB on the
         torus path — i.e. (#mezzanine-level links + 1) routers when it leaves
         the QFDB, matching the paper's N+1-switches rule (§6.1.1).
+
+        With a fault set installed (:meth:`set_faults`) the route is
+        *fault-aware but still deterministic and dimension-ordered*
+        (X -> Y -> Z, each ring traversed monotonically in one direction,
+        so the deadlock-freedom argument of §4.2 is preserved): dead
+        crossbar links relay through an alive MPSoC
+        (:meth:`_intra_qfdb_hop`), dead ring segments flip the ring
+        direction (:meth:`_ring_hops`), and a cut partition raises
+        :exc:`UnroutableError`.
         """
         sm, dm = self.core_to_mpsoc(src_core), self.core_to_mpsoc(dst_core)
+        f = self.faults
+        if f is not None:
+            for m, role in ((sm, "source"), (dm, "destination")):
+                if f.is_dead_mpsoc(m):
+                    raise UnroutableError(
+                        f"{role} MPSoC {m} (core "
+                        f"{src_core if role == 'source' else dst_core}) "
+                        f"is dead")
         if sm == dm:
             return Path(src_core, dst_core, (), 0, True)
         sq, dq = self.mpsoc_to_qfdb(sm), self.mpsoc_to_qfdb(dm)
-        links: list[Link] = []
-        n_routers = 0
         if sq == dq:
             # full crossbar inside the QFDB (§4.1)
-            links.append(Link(INTRA_QFDB, sm, dm))
-            return Path(src_core, dst_core, tuple(links), 0, False)
+            return Path(src_core, dst_core,
+                        tuple(self._intra_qfdb_hop(sm, dm)), 0, False)
+        links: list[Link] = []
+        n_routers = 0
         # hop to the network MPSoC of the source QFDB if needed
         cur_mpsoc = sm
+        for q, role in ((sq, "source"), (dq, "destination")):
+            net = self.network_mpsoc(q)
+            if f is not None and f.is_dead_mpsoc(net):
+                raise UnroutableError(
+                    f"Network MPSoC {net} of {role} QFDB {q} is dead — "
+                    f"the QFDB has no external connectivity")
         net = self.network_mpsoc(sq)
         if cur_mpsoc != net:
-            links.append(Link(INTRA_QFDB, cur_mpsoc, net))
+            links.extend(self._intra_qfdb_hop(cur_mpsoc, net))
             cur_mpsoc = net
         n_routers += 1  # source QFDB router
         # torus X -> Y -> Z between QFDBs
-        (sx, sy, sz) = self.qfdb_coords(sq)
+        cur = self.qfdb_coords(sq)
         (dx, dy, dz) = self.qfdb_coords(dq)
-        cur = (sx, sy, sz)
-        hops: list[tuple[int, int, int]] = []
-        for x in self._ring_steps(sx, dx, self.qfdbs_per_mezz):
-            cur = (x, cur[1], cur[2])
-            hops.append(cur)
-        for y in self._ring_steps(sy, dy, self.mezz_y):
-            cur = (cur[0], y, cur[2])
-            hops.append(cur)
-        for z in self._ring_steps(sz, dz, self.mezz_z):
-            cur = (cur[0], cur[1], z)
-            hops.append(cur)
-        for h in hops:
-            nxt = self.network_mpsoc(self.coords_to_qfdb(*h))
-            links.append(Link(MEZZ, cur_mpsoc, nxt))
-            cur_mpsoc = nxt
-            n_routers += 1  # router of every traversed QFDB
+        sizes = (self.qfdbs_per_mezz, self.mezz_y, self.mezz_z)
+        for dim, target in enumerate((dx, dy, dz)):
+            for h in self._ring_hops(cur, dim, target, sizes[dim]):
+                nxt = self.network_mpsoc(self.coords_to_qfdb(*h))
+                links.append(Link(MEZZ, cur_mpsoc, nxt))
+                cur_mpsoc = nxt
+                n_routers += 1  # router of every traversed QFDB
+                cur = h
         # final intra-QFDB hop
         if cur_mpsoc != dm:
-            links.append(Link(INTRA_QFDB, cur_mpsoc, dm))
+            links.extend(self._intra_qfdb_hop(cur_mpsoc, dm))
         return Path(src_core, dst_core, tuple(links), n_routers, False)
 
     # ----------------------------------------------------- named Table-1 paths

@@ -272,15 +272,39 @@ class ExanetMachine:
     name = "exanest-prototype"
     levels = (INTRA, INTER)
 
-    def __init__(self, mpi=None, params=None):
+    def __init__(self, mpi=None, params=None, faults=None):
         from repro.core.exanet.mpi import ExanetMPI
         if mpi is None:
             from repro.core.exanet.params import DEFAULT
-            mpi = ExanetMPI(params or DEFAULT, ranks_per_mpsoc=1)
+            mpi = ExanetMPI(params or DEFAULT, ranks_per_mpsoc=1,
+                            faults=faults)
         self.mpi = mpi
         self.params = mpi.p
+        self.faults = mpi.faults
+        if self.faults is not None:
+            # degraded machines are first-class MachineModel variants: the
+            # fault signature scopes every name-keyed cache (synthesized-
+            # schedule winners, DESIGN.md §2.8) to this degradation
+            self.name = f"exanest-prototype+{self.faults.signature()}"
         self._ab_cache: dict[str, tuple[float, float]] = {}
         self._tiers: dict[int, object] = {}
+        self._degraded: dict = {}
+
+    def degraded(self, spec) -> "ExanetMachine":
+        """The machine variant operating under ``spec`` (a
+        :class:`~repro.core.exanet.faults.FaultSpec`), cached by fault
+        signature: same params and placement, fault-aware routes, every
+        latency constant carrying the static degradation.  The healthy
+        spec returns ``self``."""
+        if spec is None or spec.is_empty:
+            return self
+        cached = self._degraded.get(spec)
+        if cached is None:
+            from repro.core.exanet.mpi import ExanetMPI
+            cached = self._degraded[spec] = ExanetMachine(
+                ExanetMPI(self.params, ranks_per_mpsoc=self.mpi._rpm,
+                          faults=spec))
+        return cached
 
     @property
     def placement(self) -> str:
@@ -306,7 +330,7 @@ class ExanetMachine:
         tier = self._tiers.get(p2.n_cores)
         if tier is None:
             tier = self._tiers[p2.n_cores] = ExanetMPI(
-                p2, ranks_per_mpsoc=mpi._rpm)
+                p2, ranks_per_mpsoc=mpi._rpm, faults=mpi.faults)
         return tier
 
     def _level_alpha_beta(self, level: str) -> tuple[float, float]:
@@ -476,18 +500,23 @@ class ExanetMachine:
         return out
 
     def cost_program_scenarios(self, prog, *, compute_scale=None,
-                               site_scale=None, t0=None, engine=None,
+                               byte_scale=None, site_scale=None,
+                               link_scale=None, link_latency_us=None,
+                               t0=None, engine=None,
                                check: int = 0, rtol: float = 1e-9):
         """Batched scenario costing of ONE program: bind per-column
-        compute skew / collective payload scale / entry clocks onto the
-        compiled artifact of ``prog`` and replay every column at once
+        compute skew / payload scale / collective payload scale / link
+        degradation / entry clocks onto the compiled artifact of ``prog``
+        and replay every column at once
         (:meth:`ExanetMPI.run_program_scenarios` on the tier that fits
         the rank count).  This is the machine-level fast lane the train
-        co-sim's candidate populations and the serve step table ride;
-        returns one :class:`~repro.core.program.ProgramResult` per
-        column."""
+        co-sim's candidate populations, the serve step table and the
+        Monte-Carlo fault sweeps ride; returns one
+        :class:`~repro.core.program.ProgramResult` per column."""
         return self._mpi_for(prog.nranks).run_program_scenarios(
-            prog, compute_scale=compute_scale, site_scale=site_scale,
+            prog, compute_scale=compute_scale, byte_scale=byte_scale,
+            site_scale=site_scale, link_scale=link_scale,
+            link_latency_us=link_latency_us,
             t0=t0, engine=engine, check=check, rtol=rtol)
 
     def memory_pass_s(self, nbytes: int) -> float:

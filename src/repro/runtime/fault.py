@@ -45,9 +45,15 @@ class FailureInjector:
 
 
 class StragglerMonitor:
-    def __init__(self, deadline_factor: float = 3.0, window: int = 32):
+    def __init__(self, deadline_factor: float = 3.0, window: int = 32,
+                 on_straggle: Callable | None = None):
+        """``on_straggle(step, dt, deadline)`` fires when a step exceeds
+        its running-median deadline — the mitigation hook (at scale:
+        re-dispatch the microbatch to a hot spare, or hand the planner a
+        slow-rank FaultSpec to replan against; default: record only)."""
         self.factor = deadline_factor
         self.window = window
+        self.on_straggle = on_straggle
         self.times: list[float] = []
         self.flagged: list[int] = []
 
@@ -55,9 +61,13 @@ class StragglerMonitor:
         """Returns True if the step straggled past the deadline."""
         hist = self.times[-self.window:]
         self.times.append(dt)
-        if len(hist) >= 8 and dt > self.factor * statistics.median(hist):
-            self.flagged.append(step)
-            return True
+        if len(hist) >= 8:
+            deadline = self.factor * statistics.median(hist)
+            if dt > deadline:
+                self.flagged.append(step)
+                if self.on_straggle is not None:
+                    self.on_straggle(step, dt, deadline)
+                return True
         return False
 
 

@@ -121,7 +121,8 @@ class TrainSim:
     planner and serve sweeps use.
     """
 
-    def __init__(self, spec: TrainStepSpec, machine=None):
+    def __init__(self, spec: TrainStepSpec, machine=None,
+                 rank_compute_scale=None):
         from repro.configs import get
         from repro.roofline.analysis import lm_train_step_cost
         from repro.roofline.hlo_cost import analyze_hlo, synth_train_hlo
@@ -129,6 +130,18 @@ class TrainSim:
             raise ValueError("nranks must be a power of two for the "
                              f"log-p allreduce schedules; got {spec.nranks}")
         self.spec = spec
+        # per-rank compute-time multipliers (slow/"hot" ranks, DESIGN.md
+        # §2.10): every batched costing lane sees the stragglers, so
+        # plan_train_sync replans *for* the degraded machine; the
+        # single-candidate lanes stay healthy references
+        self.rank_compute_scale = None
+        if rank_compute_scale is not None:
+            rcs = np.asarray(rank_compute_scale, dtype=np.float64)
+            if rcs.shape != (spec.nranks,):
+                raise ValueError(f"rank_compute_scale must be "
+                                 f"({spec.nranks},); got {rcs.shape}")
+            if (rcs != 1.0).any():
+                self.rank_compute_scale = rcs
         self.cfg = get(spec.arch)
         if machine is None:
             from repro.core.machine import ExanetMachine
@@ -208,6 +221,9 @@ class TrainSim:
             # compute slots are rank-major in program order and every
             # rank emits the same pattern: tile it across ranks
             cs = np.tile(pat, (self.spec.nranks, 1))
+            if self.rank_compute_scale is not None:
+                cs = cs * np.repeat(self.rank_compute_scale,
+                                    nb + 2)[:, None]
             res = self.machine.cost_program_scenarios(
                 base, compute_scale=cs, site_scale=ss, engine=engine,
                 check=min(check, N), rtol=rtol)

@@ -11,7 +11,8 @@ import pytest
 from repro.checkpoint.store import (CheckpointStore, latest_step,
                                     restore_checkpoint, save_checkpoint)
 from repro.runtime.fault import (FailureInjector, SimulatedFailure,
-                                 StragglerMonitor, run_with_recovery)
+                                 StragglerMonitor, elastic_reshard,
+                                 run_with_recovery)
 
 
 def _toy_step(state, step):
@@ -55,6 +56,36 @@ def test_straggler_in_recovery_loop(tmp_path):
                                ckpt_dir=str(tmp_path), ckpt_every=100,
                                straggler=mon, delay_fn=delay)
     assert log["straggles"] >= 1
+
+
+def _mesh_shardings(mesh_shape, axes, spec):
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = jax.make_mesh(mesh_shape, axes)
+    return {"w": NamedSharding(mesh, PartitionSpec(*spec))}
+
+
+def test_elastic_reshard_onto_shrunk_and_grown_mesh(tmp_path):
+    """Mid-run reshard: checkpoint under one mesh, restore onto a mesh
+    with fewer/more axes, finish the run — final state must equal the
+    failure-free single-mesh run exactly (pure function of (seed, step)
+    data is what makes elastic shrink/grow safe)."""
+    s0 = {"w": jnp.ones((8, 4), jnp.float32)}
+    ref, _ = run_with_recovery(s0, _toy_step, 12,
+                               ckpt_dir=str(tmp_path / "ref"),
+                               ckpt_every=4)
+    d = str(tmp_path / "elastic")
+    run_with_recovery(s0, _toy_step, 8, ckpt_dir=d, ckpt_every=4)
+    tmpl = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    for label, shardings in (
+            ("shrunk", _mesh_shardings((1,), ("data",), ("data",))),
+            ("grown", _mesh_shardings((1, 1), ("data", "model"),
+                                      ("data", "model")))):
+        state = elastic_reshard(d, 8, tmpl, shardings)
+        assert state["w"].sharding == shardings["w"], label
+        for step in range(8, 12):
+            state = _toy_step(state, step)
+        np.testing.assert_array_equal(np.asarray(ref["w"]),
+                                      np.asarray(state["w"]), label)
 
 
 def test_checkpoint_corruption_detected(tmp_path):
